@@ -1,0 +1,67 @@
+"""Fig. 6: DFedAvgM vs FedAvg vs DSGD — accuracy per round AND per bit.
+
+Derived metric: accuracy @ fixed rounds + total/bottleneck comm MB.
+"""
+import jax
+import jax.numpy as jnp
+import time
+
+from repro.core import (DSGDConfig, FedAvgConfig, MixingSpec,
+                        average_params, bottleneck_bits,
+                        dfedavgm_round_bits, dsgd_round_bits,
+                        fedavg_round_bits, init_round_state,
+                        make_dsgd_step, make_fedavg_step)
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import init_2nn
+
+from .common import acc_2nn, loss_2nn, timed, train_dfedavgm_2nn
+
+M, K, B, ROUNDS = 16, 4, 32, 30
+
+
+def run():
+    data = classification_dataset(n=8000, seed=0)
+    fed = FederatedDataset.make(data, M, iid=True)
+    rows = []
+
+    r = train_dfedavgm_2nn(m=M, K=K, batch=B, rounds=ROUNDS, data=data)
+    d = r["d"]
+    bits = dfedavgm_round_bits(r["spec"].graph, d) * ROUNDS
+    bneck = bottleneck_bits("dfedavgm", d, graph=r["spec"].graph) * ROUNDS
+    rows.append(("fig6/dfedavgm", r["us_per_round"],
+                 f"acc={r['acc']:.3f};commMB={bits/8e6:.0f};"
+                 f"bottleneckMB={bneck/8e6:.1f}"))
+
+    # FedAvg
+    p0 = init_2nn(jax.random.PRNGKey(0))
+    step = jax.jit(make_fedavg_step(loss_2nn, FedAvgConfig(
+        eta=0.05, theta=0.9, local_steps=K), M))
+    st = init_round_state(jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (M,) + t.shape), p0),
+        jax.random.PRNGKey(1))
+    t0 = time.perf_counter()
+    for t in range(ROUNDS):
+        st, _ = step(st, fed.round_batches(t, K=K, batch=B))
+    us = (time.perf_counter() - t0) / ROUNDS * 1e6
+    bits = fedavg_round_bits(M, d) * ROUNDS
+    bneck = bottleneck_bits("fedavg", d, m=M) * ROUNDS
+    rows.append(("fig6/fedavg", us,
+                 f"acc={acc_2nn(average_params(st.params), data):.3f};"
+                 f"commMB={bits/8e6:.0f};bottleneckMB={bneck/8e6:.1f}"))
+
+    # DSGD (1 grad step / round; give it the same wall budget in rounds)
+    spec = MixingSpec.ring(M)
+    stepd = jax.jit(make_dsgd_step(loss_2nn, DSGDConfig(gamma=0.1), spec))
+    std = init_round_state(jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (M,) + t.shape), p0),
+        jax.random.PRNGKey(1))
+    t0 = time.perf_counter()
+    for t in range(ROUNDS * K):      # K gossip rounds per DFedAvgM round
+        b = fed.round_batches(t, K=1, batch=B)
+        std, _ = stepd(std, b)
+    us = (time.perf_counter() - t0) / (ROUNDS * K) * 1e6
+    bits = dsgd_round_bits(spec.graph, d) * ROUNDS * K
+    rows.append(("fig6/dsgd", us,
+                 f"acc={acc_2nn(average_params(std.params), data):.3f};"
+                 f"commMB={bits/8e6:.0f}"))
+    return rows

@@ -1,0 +1,38 @@
+"""Kernel microbench: jitted wire encode/decode + fused momentum on this
+CPU (Pallas interpret timings are not TPU numbers; derived column reports
+the structural wire-byte saving, which IS hardware-true)."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import encode_delta, decode_apply_ring, momentum_update_flat
+from repro.kernels.ref import (dequant_mix_ref, momentum_sgd_ref,
+                               quantize_pack_ref, planar_pad_len)
+
+from .common import timed
+
+N = 1 << 20     # 1M-param tensor
+
+
+def run():
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (N,))
+    for bits in (8, 4):
+        ref_enc = jax.jit(lambda v, b=bits: quantize_pack_ref(
+            v, b, jnp.float32(0.01)))
+        us = timed(ref_enc, x)
+        saving = 32 / bits
+        rows.append((f"kernels/encode_ref/b{bits}", us,
+                     f"wire_saving={saving:.0f}x"))
+        words, s = encode_delta(x, bits, stochastic=False)
+        scales = jnp.stack([s, s, s])
+        ref_mix = jax.jit(lambda xx, w, b=bits, sc=scales: dequant_mix_ref(
+            xx, w, w, w, sc, b, 0.5, 0.25))
+        us = timed(ref_mix, x, words)
+        rows.append((f"kernels/dequant_mix_ref/b{bits}", us,
+                     "fused=1pass"))
+    v = jnp.zeros_like(x)
+    g = jax.random.normal(jax.random.PRNGKey(1), (N,))
+    ref_mom = jax.jit(lambda a, b, c: momentum_sgd_ref(a, b, c, 0.01, 0.9))
+    rows.append(("kernels/momentum_ref", timed(ref_mom, x, v, g),
+                 "hbm_traffic=5N"))
+    return rows

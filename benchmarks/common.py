@@ -1,0 +1,74 @@
+"""Shared helpers for the benchmark harness.
+
+Every bench module exposes ``run() -> list[tuple[name, us_per_call,
+derived]]``; ``benchmarks/run.py`` aggregates them into the required CSV
+(`name,us_per_call,derived`). ``us_per_call`` is wall time of the jitted
+step on this CPU container (NOT a TPU number — roofline projections live
+in bench_roofline); ``derived`` carries the bench's headline metric.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DFedAvgMConfig, MixingSpec, QuantConfig,
+                        average_params, init_round_state, make_round_step)
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import apply_2nn, init_2nn, softmax_xent
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def loss_2nn(p, batch, rng):
+    return softmax_xent(apply_2nn(p, batch["x"]), batch["y"])
+
+
+def acc_2nn(params, data) -> float:
+    pred = jnp.argmax(apply_2nn(params, jnp.asarray(data.x)), -1)
+    return float((pred == jnp.asarray(data.y)).mean())
+
+
+def train_dfedavgm_2nn(*, m=16, K=4, batch=32, rounds=40, eta=0.05,
+                       theta=0.9, bits=32, iid=True, data=None,
+                       self_weight=0.5, seed=0, mixer="dense",
+                       return_state=False):
+    data = data if data is not None else classification_dataset(n=8000,
+                                                                seed=0)
+    fed = FederatedDataset.make(data, m, iid=iid, seed=seed)
+    q = QuantConfig(bits=bits) if bits < 32 else None
+    spec = MixingSpec.ring(m, self_weight=self_weight)
+    step = jax.jit(make_round_step(loss_2nn, DFedAvgMConfig(
+        eta=eta, theta=theta, local_steps=K, quant=q, mixer_impl=mixer),
+        spec))
+    p0 = init_2nn(jax.random.PRNGKey(seed))
+    st = init_round_state(jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), p0),
+        jax.random.PRNGKey(seed + 1))
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        st, mt = step(st, fed.round_batches(t, K=K, batch=batch, seed=seed))
+    jax.block_until_ready(st.params)
+    wall = time.perf_counter() - t0
+    out = {
+        "acc": acc_2nn(average_params(st.params), data),
+        "loss": float(mt["loss"]),
+        "us_per_round": wall / rounds * 1e6,
+        "spec": spec,
+        "d": sum(x.size for x in jax.tree.leaves(p0)),
+    }
+    if return_state:
+        out["state"] = st
+    return out

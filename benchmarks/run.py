@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline).
+Prints ``name,us_per_call,derived`` CSV.  PYTHONPATH=src python -m benchmarks.run
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "bench_fig6_compare",     # Fig 6: vs FedAvg / DSGD (rounds & bits)
+    "bench_quant_epochs",     # Figs 2-5: bits x local epochs, IID/non-IID
+    "bench_charlm",           # Fig 7: char-LM
+    "bench_cnn",              # Fig 8: CNN image classification
+    "bench_mia",              # §6 MIA privacy probe
+    "bench_comm_cost",        # Prop 3 table per assigned arch
+    "bench_topology",         # beyond-paper: ring vs torus gossip
+    "bench_kernels",          # kernel microbench
+    "bench_roofline",         # dry-run roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench module suffixes")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [
+        m for m in MODULES if any(s in m for s in args.only.split(","))]
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in mods:
+        try:
+            m = importlib.import_module(f"benchmarks.{mod}")
+            for name, us, derived in m.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(mod)
+            traceback.print_exc()
+            print(f"{mod},NaN,FAILED:{e!r}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,54 @@
+"""Reproduce the paper's central qualitative finding (Figs 2-6): DFedAvgM
+matches FedAvg per ROUND on IID data but lags on non-IID label-shard data,
+while communicating far fewer bits; quantization barely hurts.
+
+  PYTHONPATH=src python examples/nonIID_vs_IID.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DFedAvgMConfig, FedAvgConfig, MixingSpec,
+                        QuantConfig, average_params, init_round_state,
+                        make_fedavg_step, make_round_step, CommLedger,
+                        dfedavgm_round_bits, fedavg_round_bits)
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import apply_2nn, init_2nn, softmax_xent
+
+M, K, B, ROUNDS = 16, 4, 32, 50
+data = classification_dataset(n=8000, d=784, seed=0)
+
+def loss_fn(p, batch, rng):
+    return softmax_xent(apply_2nn(p, batch["x"]), batch["y"])
+
+def accuracy(p):
+    return float((jnp.argmax(apply_2nn(p, jnp.asarray(data.x)), -1)
+                  == jnp.asarray(data.y)).mean())
+
+for iid in (True, False):
+    fed = FederatedDataset.make(data, M, iid=iid)
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    runs = {
+        "DFedAvgM-32b": make_round_step(loss_fn, DFedAvgMConfig(
+            eta=0.05, theta=0.9, local_steps=K), spec),
+        "DFedAvgM-8b": make_round_step(loss_fn, DFedAvgMConfig(
+            eta=0.05, theta=0.9, local_steps=K,
+            quant=QuantConfig(bits=8)), spec),
+        "FedAvg": make_fedavg_step(loss_fn, FedAvgConfig(
+            eta=0.05, theta=0.9, local_steps=K), M),
+    }
+    print(f"\n===== {'IID' if iid else 'Non-IID'} =====")
+    for name, step in runs.items():
+        step = jax.jit(step)
+        p0 = init_2nn(jax.random.PRNGKey(0))
+        st = init_round_state(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (M,) + t.shape), p0),
+            jax.random.PRNGKey(1))
+        for t in range(ROUNDS):
+            st, mt = step(st, fed.round_batches(t, K=K, batch=B))
+        d = sum(x.size for x in jax.tree.leaves(p0))
+        bits = (fedavg_round_bits(M, d) if name == "FedAvg" else
+                dfedavgm_round_bits(spec.graph, d,
+                                    QuantConfig(bits=8) if "8b" in name
+                                    else None)) * ROUNDS
+        print(f"{name:14s} acc={accuracy(average_params(st.params)):.3f} "
+              f"loss={float(mt['loss']):.3f} comm={bits/8/1e6:.0f}MB")

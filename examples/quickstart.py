@@ -1,0 +1,42 @@
+"""Quickstart: decentralized FedAvg-with-momentum (DFedAvgM) in ~40 lines.
+
+16 clients on a ring train a tiny MLP on a synthetic 10-class problem;
+quantized 8-bit gossip. Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DFedAvgMConfig, MixingSpec, QuantConfig,
+                        average_params, init_round_state, make_round_step)
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import apply_2nn, init_2nn, softmax_xent
+
+M_CLIENTS, K, BATCH, ROUNDS = 16, 4, 32, 60
+
+data = classification_dataset(n=8000, d=784, seed=0)
+fed = FederatedDataset.make(data, M_CLIENTS, iid=True)
+
+def loss_fn(params, batch, rng):
+    return softmax_xent(apply_2nn(params, batch["x"]), batch["y"])
+
+params = init_2nn(jax.random.PRNGKey(0))
+stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None],
+                                                  (M_CLIENTS,) + t.shape),
+                       params)
+
+spec = MixingSpec.ring(M_CLIENTS, self_weight=0.5)   # PSD ring (Alg. 2 safe)
+cfg = DFedAvgMConfig(eta=0.05, theta=0.9, local_steps=K,
+                     quant=QuantConfig(bits=8))
+step = jax.jit(make_round_step(loss_fn, cfg, spec))
+state = init_round_state(stacked, jax.random.PRNGKey(1))
+
+for t in range(ROUNDS):
+    state, metrics = step(state, fed.round_batches(t, K=K, batch=BATCH))
+    if t % 10 == 0 or t == ROUNDS - 1:
+        print(f"round {t:3d}  loss={float(metrics['loss']):.4f}  "
+              f"consensus={float(metrics['consensus_dist']):.2e}")
+
+avg = average_params(state.params)
+acc = (jnp.argmax(apply_2nn(avg, jnp.asarray(data.x)), -1)
+       == jnp.asarray(data.y)).mean()
+print(f"consensus-model accuracy: {float(acc):.3f}")

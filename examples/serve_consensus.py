@@ -1,0 +1,15 @@
+"""Serve the consensus model with batched requests: prefill + greedy decode
+(KV caches / SSM states as appropriate for the arch).
+
+  PYTHONPATH=src python examples/serve_consensus.py --arch mamba2-780m
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])

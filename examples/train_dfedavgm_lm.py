@@ -1,0 +1,22 @@
+"""End-to-end driver: train a (reduced) assigned-architecture LM with
+DFedAvgM for a few hundred rounds on synthetic data, comparing 32-bit vs
+8-bit quantized gossip communication cost.
+
+  PYTHONPATH=src python examples/train_dfedavgm_lm.py --arch smollm-135m
+(Any of the 10 assigned archs works: --arch mamba2-780m, mixtral-8x22b...)
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--rounds", type=int, default=200)
+    args = ap.parse_args()
+    for bits in (32, 8):
+        print(f"\n=== {args.arch} bits={bits} ===")
+        train_main(["--arch", args.arch, "--rounds", str(args.rounds),
+                    "--clients", "8", "--batch", "4", "--seq", "128",
+                    "--bits", str(bits)])

@@ -1,0 +1,2 @@
+from .io import (save_checkpoint, restore_checkpoint, latest_step,  # noqa
+                 list_checkpoints)

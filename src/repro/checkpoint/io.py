@@ -1,0 +1,119 @@
+"""Checkpointing: save/restore arbitrary pytrees (RoundState included).
+
+Layout per step:  <dir>/step_<N>/
+    manifest.json   — keypaths, shapes, dtypes (integrity-checked on load)
+    arrays.npz      — one entry per leaf, keyed by flattened keypath
+
+Atomicity: written to a tmp dir and os.replace()'d into place, so a
+crashed write never leaves a half checkpoint behind. ``keep`` rotates old
+steps out.
+
+Scale note: leaves are jax.device_get'd (gathered) before writing — right
+for this CPU container and for consensus-model exports. On a real pod
+you'd write per-shard (jax.experimental.array_serialization); the on-disk
+manifest format here is deliberately compatible with adding that later.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flat_with_paths(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Pytree, *,
+                    keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, _ = _flat_with_paths(tree)
+
+    def to_np(v):
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            # npz can't store ml_dtypes; upcast (restore casts back via
+            # the reference pytree's dtype)
+            a = np.asarray(jax.device_get(v), np.float32)
+        return a
+
+    arrays = {k: to_np(v) for k, v in flat}
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    if keep > 0:
+        steps = sorted(list_checkpoints(ckpt_dir))
+        for old in steps[:-keep]:
+            shutil.rmtree(ckpt_dir / f"step_{old:08d}")
+    return final
+
+
+def list_checkpoints(ckpt_dir: str | Path) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_"):
+            out.append(int(p.name[len("step_"):]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | Path, like: Pytree,
+                       step: int | None = None) -> tuple[Pytree, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes verified)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    flat, treedef = _flat_with_paths(like)
+    leaves = []
+    for key, ref in flat:
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        want = tuple(np.shape(ref))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key!r}: "
+                             f"{arr.shape} vs {want}")
+        leaves.append(jax.numpy.asarray(arr).astype(ref.dtype)
+                      if hasattr(ref, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,3 @@
+"""Architecture registry. Import repro.configs and use get_config(name)."""
+from .base import (ArchConfig, InputShape, INPUT_SHAPES, get_config,  # noqa
+                   list_archs, reduced, register)

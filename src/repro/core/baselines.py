@@ -1,0 +1,105 @@
+"""Baselines the paper compares against (Fig. 6): FedAvg and DSGD.
+
+* FedAvg [McMahan et al. 2017] — centralized: all clients run K local
+  steps, the "server" averages. Equivalent to DFedAvgM on the complete
+  graph with W = 11^T/m, which our tests assert exactly. On the TPU mesh
+  the server aggregation is a mean over the client axis (an all-reduce) —
+  the expensive global collective the paper wants to avoid.
+
+* DSGD [Lian et al. 2017] — decentralized SGD, eq. (2) of the paper:
+  one gradient step + one gossip per round:
+      x^{t+1}(i) = sum_l w_il x^t(l) - gamma * g^t(i).
+
+Both reuse the same loss functions/data pipeline, so comparisons are
+apples-to-apples in rounds *and* in communicated bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dfedavgm import RoundState
+from .local_sgd import local_train
+from .mixing import consensus_distance, mix_dense
+from .topology import MixingSpec
+
+Pytree = Any
+LossFn = Callable[..., jnp.ndarray]
+
+__all__ = ["FedAvgConfig", "make_fedavg_step", "DSGDConfig", "make_dsgd_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgConfig:
+    eta: float = 0.1
+    theta: float = 0.0       # plain local SGD unless momentum requested
+    local_steps: int = 4
+
+
+def make_fedavg_step(loss_fn: LossFn, cfg: FedAvgConfig, m: int,
+                     with_metrics: bool = True) -> Callable:
+    """round_step(state, batches[m, K, ...]) -> (state', metrics).
+
+    Full participation (the paper's Fig. 6 setting: "we select all clients
+    ... in each round").
+    """
+
+    def round_step(state: RoundState, batches: Pytree):
+        key_round, key_next = jax.random.split(state.rng)
+        client_keys = jax.random.split(key_round, m)
+        train_one = lambda p, b, k: local_train(
+            loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta)
+        z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
+        # Server aggregation: mean over the client axis, broadcast back.
+        zbar = jax.tree.map(
+            lambda t: jnp.broadcast_to(
+                jnp.mean(t.astype(jnp.float32), axis=0, keepdims=True),
+                t.shape).astype(t.dtype), z)
+        metrics = {"loss": jnp.mean(losses)}
+        if with_metrics:
+            metrics["consensus_dist"] = consensus_distance(zbar)
+            metrics["local_drift"] = consensus_distance(z)
+        return RoundState(params=zbar, rng=key_next,
+                          round=state.round + 1), metrics
+
+    return round_step
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGDConfig:
+    gamma: float = 0.1
+
+
+def make_dsgd_step(loss_fn: LossFn, cfg: DSGDConfig, spec: MixingSpec,
+                   with_metrics: bool = True) -> Callable:
+    """Eq. (2): gossip the current params, subtract a local gradient.
+
+    ``batches`` leaves are [m, 1, ...] (one minibatch per round) so the
+    data pipeline is shared with DFedAvgM at K=1.
+    """
+    m = spec.m
+
+    def round_step(state: RoundState, batches: Pytree):
+        key_round, key_next = jax.random.split(state.rng)
+        client_keys = jax.random.split(key_round, m)
+        one = jax.tree.map(lambda b: b[:, 0], batches)
+
+        def grad_one(p, b, k):
+            return jax.value_and_grad(loss_fn)(p, b, k)
+
+        losses, grads = jax.vmap(grad_one)(state.params, one, client_keys)
+        mixed = mix_dense(spec.W, state.params)
+        x_next = jax.tree.map(
+            lambda xm, g: (xm.astype(jnp.float32)
+                           - cfg.gamma * g.astype(jnp.float32)).astype(xm.dtype),
+            mixed, grads)
+        metrics = {"loss": jnp.mean(losses)}
+        if with_metrics:
+            metrics["consensus_dist"] = consensus_distance(x_next)
+        return RoundState(params=x_next, rng=key_next,
+                          round=state.round + 1), metrics
+
+    return round_step

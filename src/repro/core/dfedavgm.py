@@ -1,0 +1,117 @@
+"""DFedAvgM (Algorithm 1) and quantized DFedAvgM (Algorithm 2).
+
+One *communication round* (the jitted unit of work):
+
+  1. every client i runs K heavy-ball SGD steps from x^t(i)   (local_sgd)
+  2. unquantized: send z^t(i) = y^{t,K}(i); x^{t+1} = W z^t    (eq. 5)
+     quantized:   send q^t(i) = Q(y^{t,K}(i) - x^t(i));
+                  x^{t+1}(i) = x^t(i) + sum_l w_il q^t(l)      (eq. 7)
+
+Client copies are stacked on a leading axis of size m. Local training is a
+``vmap`` over that axis; gossip is a mixer from ``core.mixing``. Under pjit
+the client axis is sharded over the mesh's (pod, data) axes, making each
+client a tensor-parallel chip group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .local_sgd import local_train
+from .mixing import MixerConfig, consensus_distance, make_mixer
+from .quantize import QuantConfig, message_bits
+from .topology import MixingSpec
+
+Pytree = Any
+LossFn = Callable[..., jnp.ndarray]
+
+__all__ = ["DFedAvgMConfig", "RoundState", "init_round_state",
+           "make_round_step", "average_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DFedAvgMConfig:
+    """Hyper-parameters of Algorithms 1/2.
+
+    eta:   local learning rate (paper's eta; needs eta <= 1/(8 L K) in Thm 1)
+    theta: heavy-ball momentum (paper's theta in [0, 1))
+    local_steps: K — local iterations per communication round
+    quant: None -> Algorithm 1; QuantConfig -> Algorithm 2
+    mixer_impl: "auto" | "dense" | "ring"
+    """
+
+    eta: float = 0.01
+    theta: float = 0.9
+    local_steps: int = 4
+    quant: QuantConfig | None = None
+    mixer_impl: str = "auto"
+
+    def mixer_config(self) -> MixerConfig:
+        return MixerConfig(impl=self.mixer_impl, quant=self.quant)
+
+
+class RoundState(NamedTuple):
+    params: Pytree       # stacked client copies, leaves [m, ...]
+    rng: jax.Array       # round-level key
+    round: jnp.ndarray   # int32 counter
+
+
+def init_round_state(params_stacked: Pytree, key: jax.Array) -> RoundState:
+    return RoundState(params=params_stacked, rng=key,
+                      round=jnp.zeros((), jnp.int32))
+
+
+def average_params(stacked: Pytree) -> Pytree:
+    """Consensus/average model xbar = (1/m) sum_i x(i) (what Thm 1 tracks,
+    and the model we serve)."""
+    return jax.tree.map(lambda z: jnp.mean(z.astype(jnp.float32), axis=0)
+                        .astype(z.dtype), stacked)
+
+
+def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig, spec: MixingSpec,
+                    mesh=None, client_axes: Sequence[str] = (),
+                    param_specs: Pytree | None = None,
+                    fused_update=None,
+                    with_metrics: bool = True) -> Callable:
+    """Build round_step(state, batches) -> (state', metrics).
+
+    ``batches``: pytree with leaves [m, K, ...] — K minibatches per client
+    per round (the data pipeline shards these identically to params' client
+    axis).
+    """
+    mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
+                       client_axes=client_axes, param_specs=param_specs)
+    m = spec.m
+
+    def round_step(state: RoundState, batches: Pytree):
+        key_round, key_mix, key_next = jax.random.split(state.rng, 3)
+        client_keys = jax.random.split(key_round, m)
+
+        train_one = lambda p, b, k: local_train(
+            loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
+            fused_update=fused_update)
+        z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
+
+        x_next = mixer(state.params, z, key_mix)
+
+        metrics = {"loss": jnp.mean(losses)}
+        if with_metrics:
+            metrics["consensus_dist"] = consensus_distance(x_next)
+            metrics["local_drift"] = consensus_distance(z)
+        new_state = RoundState(params=x_next, rng=key_next,
+                               round=state.round + 1)
+        return new_state, metrics
+
+    return round_step
+
+
+def round_comm_bits(spec: MixingSpec, n_params: int,
+                    quant: QuantConfig | None) -> int:
+    """Total bits moved on the graph in ONE round (paper §3.2 accounting):
+    every client sends its (possibly quantized) message to each neighbor."""
+    qc = quant if quant is not None else QuantConfig(bits=32)
+    per_edge = message_bits(n_params, qc)
+    return per_edge * spec.graph.num_directed_edges()

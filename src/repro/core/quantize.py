@@ -1,0 +1,229 @@
+"""b-bit quantizers (paper §3.2, Assumption 4) + uint32 bit-packing.
+
+The paper quantizes onto the grid ``{-2^{b-1} s, ..., (2^{b-1}-1) s}``:
+
+  deterministic: q(a) = floor(a/s) * s
+  stochastic:    q(a) = ks   w.p. 1 - (a-ks)/s,   (k+1)s  w.p. (a-ks)/s
+
+Both satisfy Assumption 4:  E||Q(x) - x||^2 <= d/4 * s^2 (deterministic is
+actually <= d*s^2 worst case, <= d/4 s^2 after the paper's centering
+argument; our tests check the exact per-scheme bounds).
+
+Wire format: integers are offset-encoded into unsigned ``b``-bit fields and
+packed 32/b per ``uint32`` word. A transmitted message is ``(s, packed)`` —
+``32 + d*b`` bits per edge exactly as the paper counts it. The *packed*
+array is what the collectives move (see core.mixing), so the communication
+saving is visible in the compiled HLO, not just in bookkeeping.
+
+A Pallas TPU kernel implementing the same pack/unpack lives in
+``repro.kernels.quantize_pack``; this module is the numpy/jnp reference
+API used everywhere correctness matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantConfig",
+    "quantize_int",
+    "dequantize_int",
+    "quantize",
+    "pack_bits",
+    "unpack_bits",
+    "quantize_pytree",
+    "dequantize_pytree",
+    "message_bits",
+]
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization hyper-parameters (paper parameters ``s`` and ``b``).
+
+    bits:       field width b (2, 4, 8 or 16; 32 disables quantization)
+    stochastic: unbiased stochastic rounding vs deterministic floor
+    scale_mode: "per_tensor" chooses s from max-abs so nothing overflows
+                (Prop-3's no-overflow assumption holds by construction);
+                "fixed" uses the paper's constant s.
+    s:          the fixed step (scale_mode="fixed" only)
+    """
+
+    bits: int = 8
+    stochastic: bool = True
+    scale_mode: str = "per_tensor"
+    s: float = 1e-3
+    # Which quantized-gossip recursion to run (see DESIGN.md §7 note):
+    #   "eq7"    — Algorithm 2 verbatim: x' = x + W @ Q(z - x). The paper's
+    #              wire-minimal form, but its Jacobian is I - eta_eff*W, so
+    #              it is stable only for PSD mixing matrices (use e.g. a
+    #              ring with self-weight 1/2). Our analysis & tests cover
+    #              this; the paper does not state it.
+    #   "lemma5" — the recursion the paper's PROOFS analyze (§5.1, eq. 16):
+    #              x' = W @ (x + Q(z - x)). Keeps the W-contraction on x;
+    #              stable for any Definition-1 W. Requires neighbor-replica
+    #              bookkeeping to realize over a real edge network, but on
+    #              a TPU mesh it is just another collective.
+    # DEFAULT is "lemma5": it is the recursion all of §5 analyzes AND the
+    # one whose behavior matches the paper's empirical claims (quantization
+    # does not degrade accuracy). Our EXPERIMENTS.md quantifies the gap.
+    delta_mode: str = "lemma5"
+
+    def __post_init__(self):
+        if self.bits not in (2, 4, 8, 16, 32):
+            raise ValueError(f"bits must be in (2,4,8,16,32), got {self.bits}")
+        if self.scale_mode not in ("per_tensor", "fixed"):
+            raise ValueError(f"bad scale_mode {self.scale_mode!r}")
+        if self.delta_mode not in ("eq7", "lemma5"):
+            raise ValueError(f"bad delta_mode {self.delta_mode!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits < 32
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+    @property
+    def values_per_word(self) -> int:
+        return 32 // self.bits
+
+
+def _scale_for(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    if cfg.scale_mode == "fixed":
+        return jnp.asarray(cfg.s, dtype=jnp.float32)
+    # per-tensor: grid must cover [-max|x|, max|x|] -> s = max|x| / (qmax)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    s = amax / cfg.qmax
+    # Avoid s == 0 on an all-zero tensor (q would be 0 anyway).
+    return jnp.where(s > 0, s, jnp.float32(1.0))
+
+
+def quantize_int(x: jnp.ndarray, cfg: QuantConfig,
+                 key: jax.Array | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (k int32 in [qmin, qmax], s). Dequantize with k*s."""
+    x = x.astype(jnp.float32)
+    s = _scale_for(x, cfg)
+    a = x / s
+    k = jnp.floor(a)
+    if cfg.stochastic:
+        if key is None:
+            raise ValueError("stochastic quantization needs a PRNG key")
+        p = a - k  # in [0, 1)
+        bump = (jax.random.uniform(key, x.shape) < p).astype(jnp.float32)
+        k = k + bump
+    k = jnp.clip(k, cfg.qmin, cfg.qmax).astype(jnp.int32)
+    return k, s
+
+
+def dequantize_int(k: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return k.astype(jnp.float32) * s
+
+
+def quantize(x: jnp.ndarray, cfg: QuantConfig,
+             key: jax.Array | None = None) -> jnp.ndarray:
+    """Round-trip quantize: Q(x) as float (paper's Q operator, eq. 6)."""
+    if not cfg.enabled:
+        return x.astype(jnp.float32)
+    k, s = quantize_int(x, cfg, key)
+    return dequantize_int(k, s)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing: int32 in [qmin, qmax] -> offset b-bit fields in uint32 words
+# ---------------------------------------------------------------------------
+
+def packed_len(n: int, bits: int) -> int:
+    per = 32 // bits
+    return -(-n // per)  # ceil
+
+
+def pack_bits(k: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack signed ints (1-D, any length) into a uint32 word array.
+
+    Offset-encodes ``k + 2^{b-1}`` into unsigned fields, 32/b per word.
+    """
+    if bits == 32:
+        # Pass-through wire format: reinterpret int32 as uint32.
+        return jax.lax.bitcast_convert_type(k.astype(jnp.int32), jnp.uint32)
+    per = 32 // bits
+    n = k.shape[0]
+    npad = packed_len(n, bits) * per
+    off = (k.astype(jnp.int32) + (1 << (bits - 1))).astype(jnp.uint32)
+    off = jnp.pad(off, (0, npad - n))
+    off = off.reshape(-1, per)  # [words, per]
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    packed = (off << shifts[None, :])
+    return packed.sum(axis=1, dtype=jnp.uint32)  # disjoint fields: sum == or
+
+
+def unpack_bits(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Inverse of pack_bits -> int32 of length n."""
+    if bits == 32:
+        return jax.lax.bitcast_convert_type(words, jnp.int32)[:n]
+    per = 32 // bits
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    fields = (words[:, None] >> shifts[None, :]) & mask
+    k = fields.reshape(-1).astype(jnp.int32) - (1 << (bits - 1))
+    return k[:n]
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers — quantize every leaf of a model delta
+# ---------------------------------------------------------------------------
+
+def quantize_pytree(tree: Pytree, cfg: QuantConfig,
+                    key: jax.Array | None = None,
+                    pack: bool = True) -> tuple[Pytree, Pytree]:
+    """Quantize every leaf. Returns (wire_tree, scales_tree).
+
+    wire leaf: packed uint32 words (pack=True) or int32 codes (pack=False).
+    Leaf shape information is recoverable from the original tree, which the
+    receiver holds (it knows the model architecture).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if cfg.stochastic and cfg.enabled:
+        if key is None:
+            raise ValueError("stochastic quantization needs a PRNG key")
+        keys = list(jax.random.split(key, len(leaves)))
+    else:
+        keys = [None] * len(leaves)
+    wire, scales = [], []
+    for leaf, k in zip(leaves, keys):
+        flat = leaf.reshape(-1)
+        code, s = quantize_int(flat, cfg, k)
+        wire.append(pack_bits(code, cfg.bits) if pack else code)
+        scales.append(s)
+    return jax.tree.unflatten(treedef, wire), jax.tree.unflatten(treedef, scales)
+
+
+def dequantize_pytree(wire: Pytree, scales: Pytree, like: Pytree,
+                      cfg: QuantConfig, packed: bool = True) -> Pytree:
+    """Inverse of quantize_pytree; ``like`` supplies shapes/dtypes."""
+    def deq(w, s, ref):
+        n = int(np.prod(ref.shape)) if ref.shape else 1
+        code = unpack_bits(w, cfg.bits, n) if packed else w
+        return dequantize_int(code, s).reshape(ref.shape)
+
+    return jax.tree.map(deq, wire, scales, like)
+
+
+def message_bits(d: int, cfg: QuantConfig) -> int:
+    """Bits to send one d-dim tensor to ONE neighbor (paper: 32 + d*b)."""
+    if not cfg.enabled:
+        return 32 * d
+    return 32 + d * cfg.bits

@@ -1,0 +1,309 @@
+"""Communication graphs and mixing matrices (paper §2, Definition 1).
+
+A mixing matrix ``W`` for a connected undirected graph ``G=(V,E)`` must
+satisfy (Definition 1):
+
+  1. (Graph)      w_ij = 0 iff i != j and (i,j) not in E, else w_ij > 0
+  2. (Symmetry)   W = W^T
+  3. (Null space) null(I - W) = span(1)
+  4. (Spectral)   I >= W > -I
+
+The key scalar is ``lambda(W) = max(|lambda_2|, |lambda_m|)`` — the
+second-largest eigenvalue magnitude — which controls the gossip mixing
+speed (Lemma 1: ||W^k - 11^T/m||_op <= lambda^k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "ring_graph",
+    "chain_graph",
+    "torus_graph",
+    "complete_graph",
+    "star_graph",
+    "erdos_renyi_graph",
+    "metropolis_hastings",
+    "max_degree_weights",
+    "lazy_uniform",
+    "spectral_gap",
+    "mixing_lambda",
+    "check_mixing_matrix",
+    "MixingSpec",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph on m nodes stored as a boolean adjacency matrix.
+
+    ``adj`` excludes self-loops; every mixing-matrix constructor adds the
+    diagonal itself.
+    """
+
+    adj: np.ndarray  # [m, m] bool, symmetric, zero diagonal
+    name: str = "custom"
+
+    def __post_init__(self):
+        a = np.asarray(self.adj, dtype=bool)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.array_equal(a, a.T):
+            raise ValueError("adjacency must be symmetric (undirected graph)")
+        if a.diagonal().any():
+            raise ValueError("adjacency must have zero diagonal")
+        object.__setattr__(self, "adj", a)
+
+    @property
+    def m(self) -> int:
+        return self.adj.shape[0]
+
+    def degrees(self) -> np.ndarray:
+        return self.adj.sum(axis=1)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adj[i])[0]
+
+    def edges(self) -> Iterable[tuple[int, int]]:
+        ii, jj = np.nonzero(np.triu(self.adj, k=1))
+        return list(zip(ii.tolist(), jj.tolist()))
+
+    def num_directed_edges(self) -> int:
+        """sum_i deg(i) — what the paper's comm-cost formulas count."""
+        return int(self.adj.sum())
+
+    def is_connected(self) -> bool:
+        m = self.m
+        seen = np.zeros(m, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            u = stack.pop()
+            for v in np.nonzero(self.adj[u])[0]:
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(int(v))
+        return bool(seen.all())
+
+
+def ring_graph(m: int) -> Graph:
+    """The paper's experimental topology: a simple ring (§6)."""
+    if m < 2:
+        raise ValueError("ring needs m >= 2")
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        adj[i, (i + 1) % m] = True
+        adj[(i + 1) % m, i] = True
+    if m == 2:  # the two "edges" coincide
+        adj = np.array([[False, True], [True, False]])
+    return Graph(adj, name=f"ring{m}")
+
+
+def chain_graph(m: int) -> Graph:
+    adj = np.zeros((m, m), dtype=bool)
+    for i in range(m - 1):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    return Graph(adj, name=f"chain{m}")
+
+
+def torus_graph(rows: int, cols: int) -> Graph:
+    """2-D torus — the natural match for a TPU 2-D mesh with wraparound."""
+    m = rows * cols
+    adj = np.zeros((m, m), dtype=bool)
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            u = idx(r, c)
+            for v in (idx(r + 1, c), idx(r, c + 1)):
+                if u != v:
+                    adj[u, v] = adj[v, u] = True
+    return Graph(adj, name=f"torus{rows}x{cols}")
+
+
+def complete_graph(m: int) -> Graph:
+    adj = ~np.eye(m, dtype=bool)
+    return Graph(adj, name=f"complete{m}")
+
+
+def star_graph(m: int) -> Graph:
+    """Node 0 is the hub — the *centralized* FedAvg topology as a graph."""
+    adj = np.zeros((m, m), dtype=bool)
+    adj[0, 1:] = True
+    adj[1:, 0] = True
+    return Graph(adj, name=f"star{m}")
+
+
+def erdos_renyi_graph(m: int, p: float, seed: int = 0) -> Graph:
+    """Random G(m,p), resampled until connected (bounded retries)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(256):
+        u = rng.random((m, m))
+        adj = np.triu(u < p, k=1)
+        adj = adj | adj.T
+        g = Graph(adj, name=f"er{m}_p{p}")
+        if g.is_connected():
+            return g
+    raise RuntimeError(f"could not sample a connected G({m},{p})")
+
+
+# ---------------------------------------------------------------------------
+# Mixing matrices
+# ---------------------------------------------------------------------------
+
+def metropolis_hastings(graph: Graph) -> np.ndarray:
+    """Metropolis–Hastings weights [Boyd et al. 2004], cited in the paper.
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for (i,j) in E; diagonal fills the
+    slack. Always satisfies Definition 1 for a connected graph.
+    """
+    deg = graph.degrees()
+    m = graph.m
+    W = np.zeros((m, m), dtype=np.float64)
+    for i, j in graph.edges():
+        w = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i, j] = W[j, i] = w
+    np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+    return W
+
+
+def max_degree_weights(graph: Graph) -> np.ndarray:
+    """Maximum-degree weights: w_ij = 1/(1+deg_max) on edges."""
+    dmax = int(graph.degrees().max())
+    m = graph.m
+    W = np.where(graph.adj, 1.0 / (dmax + 1.0), 0.0)
+    np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+    return W
+
+
+def lazy_uniform(graph: Graph, self_weight: float = 1.0 / 3.0) -> np.ndarray:
+    """Uniform neighbor weights with a fixed self-weight.
+
+    For a ring with self_weight=1/3 this is the classic (1/3,1/3,1/3)
+    gossip matrix used in the paper's experiments.
+    """
+    deg = graph.degrees().astype(np.float64)
+    if (deg == 0).any():
+        raise ValueError("graph has isolated nodes")
+    m = graph.m
+    W = np.where(graph.adj, ((1.0 - self_weight) / deg)[:, None], 0.0)
+    # Symmetrize: only valid uniformly if the graph is regular.
+    if not np.allclose(W, W.T):
+        raise ValueError("lazy_uniform requires a regular graph; "
+                         "use metropolis_hastings instead")
+    np.fill_diagonal(W, self_weight)
+    return W
+
+
+def mixing_lambda(W: np.ndarray) -> float:
+    """lambda(W) = max(|lambda_2|, |lambda_m|) (paper §2)."""
+    ev = np.sort(np.linalg.eigvalsh(np.asarray(W, dtype=np.float64)))[::-1]
+    return float(max(abs(ev[1]), abs(ev[-1])))
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """1 - lambda(W): appears in the denominators of Thm 1 / Lemma 4."""
+    return 1.0 - mixing_lambda(W)
+
+
+def check_mixing_matrix(W: np.ndarray, graph: Graph | None = None,
+                        atol: float = 1e-10) -> None:
+    """Raise if W violates Definition 1. Used by tests and constructors."""
+    W = np.asarray(W, dtype=np.float64)
+    m = W.shape[0]
+    if W.shape != (m, m):
+        raise ValueError("W must be square")
+    if not np.allclose(W, W.T, atol=atol):
+        raise ValueError("W must be symmetric")
+    if not np.allclose(W.sum(axis=1), 1.0, atol=1e-8):
+        raise ValueError("rows of W must sum to 1")
+    ev = np.linalg.eigvalsh(W)
+    if ev.min() <= -1.0 + 1e-12:
+        raise ValueError("need W > -I (smallest eigenvalue > -1)")
+    if ev.max() > 1.0 + 1e-8:
+        raise ValueError("need I >= W")
+    # null(I - W) = span(1)  <=>  eigenvalue 1 is simple (for connected G).
+    if np.sum(np.abs(ev - 1.0) < 1e-8) != 1:
+        raise ValueError("eigenvalue 1 of W must be simple "
+                         "(is the graph connected?)")
+    if graph is not None:
+        off = ~np.eye(m, dtype=bool)
+        if np.any((W != 0) & off & ~graph.adj):
+            raise ValueError("W has weight on a non-edge")
+        if np.any((np.abs(W) < atol) & graph.adj):
+            raise ValueError("W must be strictly positive on edges")
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingSpec:
+    """A graph + mixing matrix bundle consumed by core.mixing.
+
+    ``kind`` records whether the sparse ring path (ppermute) may be used.
+    """
+
+    graph: Graph
+    W: np.ndarray
+    kind: str  # "ring" | "torus" | "dense"
+    torus_shape: tuple[int, int] | None = None
+
+    @property
+    def m(self) -> int:
+        return self.graph.m
+
+    @property
+    def lam(self) -> float:
+        return mixing_lambda(self.W)
+
+    @staticmethod
+    def ring(m: int, self_weight: float = 1.0 / 3.0) -> "MixingSpec":
+        g = ring_graph(m)
+        if m == 2:
+            W = np.array([[self_weight, 1 - self_weight],
+                          [1 - self_weight, self_weight]])
+        else:
+            W = lazy_uniform(g, self_weight=self_weight)
+        check_mixing_matrix(W, g)
+        return MixingSpec(graph=g, W=W, kind="ring")
+
+    @staticmethod
+    def dense(graph: Graph, scheme: str = "metropolis") -> "MixingSpec":
+        if scheme == "metropolis":
+            W = metropolis_hastings(graph)
+        elif scheme == "max_degree":
+            W = max_degree_weights(graph)
+        else:
+            raise ValueError(f"unknown scheme {scheme!r}")
+        check_mixing_matrix(W, graph)
+        return MixingSpec(graph=graph, W=W, kind="dense")
+
+    @staticmethod
+    def complete(m: int) -> "MixingSpec":
+        """W = 11^T/m — makes DFedAvgM coincide with (all-client) FedAvg."""
+        g = complete_graph(m)
+        W = np.full((m, m), 1.0 / m)
+        check_mixing_matrix(W, g)
+        return MixingSpec(graph=g, W=W, kind="dense")
+
+    @staticmethod
+    def torus(rows: int, cols: int,
+              self_weight: float = 0.2) -> "MixingSpec":
+        """2-D torus with uniform neighbor weights — the natural gossip
+        graph for a physical 2-D TPU mesh (4 ppermutes instead of an
+        all-gather; much smaller lambda than a ring of the same size).
+        kind="torus" enables the sparse shard_map mixer."""
+        g = torus_graph(rows, cols)
+        deg = g.degrees()
+        if not (deg == deg[0]).all():
+            raise ValueError("torus must be regular")
+        w_nb = (1.0 - self_weight) / float(deg[0])
+        W = np.where(g.adj, w_nb, 0.0)
+        np.fill_diagonal(W, self_weight)
+        check_mixing_matrix(W, g)
+        return MixingSpec(graph=g, W=W, kind="torus",
+                          torus_shape=(rows, cols))

@@ -1,0 +1,4 @@
+from .synthetic import (classification_dataset, char_stream,  # noqa
+                        lm_round_batches, ClassificationData)
+from .federated import (FederatedDataset, partition_iid,  # noqa
+                        partition_noniid_shards)

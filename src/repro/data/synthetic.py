@@ -1,0 +1,94 @@
+"""Deterministic synthetic data streams (the container is offline; see
+DESIGN.md §7.3 — real MNIST/Shakespeare/CIFAR10 are replaced by stand-ins
+with the same shapes, class structure, and partitioning protocol).
+
+* ``classification_dataset`` — 10-class Gaussian-mixture "MNIST-like"
+  (784-dim) or "CIFAR-like" (32x32x3) images: class means are fixed random
+  directions; within-class noise controls difficulty.
+* ``char_stream`` — Markov-chain character stream ("Shakespeare-like"),
+  vocabulary 90, with per-client transition biases in the non-IID setting.
+* ``lm_round_batches`` — token batches for the transformer archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["classification_dataset", "char_stream", "lm_round_batches",
+           "ClassificationData"]
+
+
+@dataclasses.dataclass
+class ClassificationData:
+    x: np.ndarray          # [n, ...features]
+    y: np.ndarray          # [n] int
+    n_classes: int
+
+
+def classification_dataset(n: int = 12000, *, d: int = 784,
+                           n_classes: int = 10, noise: float = 1.2,
+                           image: bool = False, img_side: int = 32,
+                           seed: int = 0) -> ClassificationData:
+    """Gaussian mixture with unit-norm class means scaled to give a
+    learnable-but-not-trivial problem (paper-qualitative regime)."""
+    rng = np.random.default_rng(seed)
+    if image:
+        shape = (img_side, img_side, 3)
+        d = int(np.prod(shape))
+        # low-frequency class templates (4x4 upsampled): spatially
+        # coherent, so convolutional models can actually pick them up
+        up = img_side // 4
+        coarse = rng.normal(size=(n_classes, 4, 4, 3)).astype(np.float32)
+        means = np.kron(coarse, np.ones((1, up, up, 1), np.float32))
+        means = means.reshape(n_classes, d)
+    else:
+        means = rng.normal(size=(n_classes, d)).astype(np.float32)
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    means *= 4.0
+    y = rng.integers(0, n_classes, size=n)
+    x = means[y] + noise * rng.normal(size=(n, d)).astype(np.float32)
+    if image:
+        x = x.reshape(n, *shape)
+    else:
+        x = x.astype(np.float32)
+    return ClassificationData(x=x, y=y.astype(np.int64),
+                              n_classes=n_classes)
+
+
+def char_stream(n_chars: int = 200_000, *, vocab: int = 90, order: float = 4.0,
+                bias_seed: int | None = None, seed: int = 0) -> np.ndarray:
+    """Markov chain over ``vocab`` symbols. ``bias_seed`` perturbs the
+    transition matrix -> per-client distribution shift (non-IID)."""
+    rng = np.random.default_rng(seed)
+    # sharpen the transition rows (temperature 1/order) => low-entropy,
+    # learnable stream; order=1 is near-uniform
+    base = rng.dirichlet(np.full(vocab, 0.5), size=vocab) ** order
+    if bias_seed is not None:
+        brng = np.random.default_rng(bias_seed)
+        base = base * brng.dirichlet(np.full(vocab, 2.0), size=vocab)
+    base /= base.sum(axis=1, keepdims=True)
+    out = np.empty(n_chars, dtype=np.int32)
+    s = int(rng.integers(vocab))
+    cum = np.cumsum(base, axis=1)
+    u = rng.random(n_chars)
+    for i in range(n_chars):
+        s = int(np.searchsorted(cum[s], u[i]))
+        s = min(s, vocab - 1)
+        out[i] = s
+    return out
+
+
+def lm_round_batches(key, round_idx: int, *, m: int, K: int, batch: int,
+                     seq: int, vocab: int) -> dict:
+    """Synthetic next-token batches [m, K, batch, seq] for one round.
+    Deterministic in (key, round_idx). Targets are the shifted stream of a
+    structured sequence (learnable: tokens follow t+1 = (t*5+c) % vocab)."""
+    k = jax.random.fold_in(key, round_idx)
+    start = jax.random.randint(k, (m, K, batch, 1), 0, vocab)
+    ar = jnp.arange(seq + 1, dtype=jnp.int32)
+    tokens = (start + 5 * ar[None, None, None, :]) % vocab
+    return {"tokens": tokens[..., :seq].astype(jnp.int32),
+            "targets": tokens[..., 1:].astype(jnp.int32)}

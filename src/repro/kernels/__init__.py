@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's communication/update hot spots.
+
+quantize_pack — b-bit quantize + planar bit-pack (wire encoder, Alg. 2)
+dequant_mix   — fused unpack + dequantize + ring gossip apply (eq. 7)
+momentum_sgd  — fused heavy-ball parameter update (eq. 4)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a padded/jit'd wrapper
+in ``ops.py``; tests sweep shapes/dtypes in interpret mode against ref.
+"""
+from .ops import (default_interpret, encode_delta, decode_apply_ring,  # noqa
+                  momentum_update_flat, make_fused_momentum_update)

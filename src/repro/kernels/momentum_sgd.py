@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused heavy-ball update (paper eq. 4, velocity form).
+
+    v' = theta * v - eta * g
+    y' = y + v'
+
+Runs K times per communication round on every parameter — the elementwise
+hot loop of local training. Unfused, XLA would emit separate HBM traffic
+for the intermediate; fused we read (y, v, g) once and write (y', v')
+once: 3 reads + 2 writes of N elements, the bandwidth floor.
+
+Grid: 2-D over (row blocks, lane blocks) of a [R, C] view (C % 128 == 0).
+VMEM per step: 5 blocks of ROW_BLOCK x LANE_BLOCK f32 = 5*8*512*4 ≈ 80 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+LANE_BLOCK = 512
+
+
+def _momentum_kernel(y_ref, v_ref, g_ref, y_out, v_out, *, eta: float,
+                     theta: float):
+    v_next = (theta * v_ref[...].astype(jnp.float32)
+              - eta * g_ref[...].astype(jnp.float32))
+    y_out[...] = (y_ref[...].astype(jnp.float32) + v_next).astype(y_out.dtype)
+    v_out[...] = v_next.astype(v_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "theta", "interpret"))
+def momentum_sgd_pallas(y2d: jnp.ndarray, v2d: jnp.ndarray, g2d: jnp.ndarray,
+                        *, eta: float, theta: float,
+                        interpret: bool = False
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All inputs [R, C] with R % ROW_BLOCK == 0, C % LANE_BLOCK == 0."""
+    r, c = y2d.shape
+    assert r % ROW_BLOCK == 0 and c % LANE_BLOCK == 0, (r, c)
+    grid = (r // ROW_BLOCK, c // LANE_BLOCK)
+    spec = pl.BlockSpec((ROW_BLOCK, LANE_BLOCK), lambda i, j: (i, j))
+    kernel = functools.partial(_momentum_kernel, eta=eta, theta=theta)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(y2d.shape, y2d.dtype),
+                   jax.ShapeDtypeStruct(v2d.shape, v2d.dtype)),
+        interpret=interpret,
+    )(y2d, v2d, g2d)

@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels (padding, layout, rng).
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container (Pallas interpret mode executes the kernel body in Python)
+and compile to real TPU kernels on device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dequant_mix import dequant_mix_pallas
+from .momentum_sgd import LANE_BLOCK as MS_LANE, ROW_BLOCK as MS_ROW
+from .momentum_sgd import momentum_sgd_pallas
+from .quantize_pack import quantize_pack_pallas
+from .ref import LANE_BLOCK, planar_pad_len
+
+Pytree = Any
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Wire encode / decode+apply
+# ---------------------------------------------------------------------------
+
+def encode_delta(delta: jnp.ndarray, bits: int, *, stochastic: bool = True,
+                 key: jax.Array | None = None,
+                 interpret: bool | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Flat f32 delta -> (packed uint32 words [W], per-tensor scale s)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = delta.shape[0]
+    per, w = planar_pad_len(n, bits)
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(delta.astype(jnp.float32)))
+    s = jnp.where(amax > 0, amax / qmax, jnp.float32(1.0))
+    x2d = jnp.pad(delta.astype(jnp.float32), (0, per * w - n)).reshape(per, w)
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic encode needs a key")
+        noise = jax.random.uniform(key, (per, w), jnp.float32)
+    else:
+        noise = jnp.zeros((per, w), jnp.float32)
+    words = quantize_pack_pallas(x2d, s, noise, bits=bits,
+                                 stochastic=stochastic, interpret=interpret)
+    return words, s
+
+
+def decode_apply_ring(x: jnp.ndarray, q_own: jnp.ndarray, q_left: jnp.ndarray,
+                      q_right: jnp.ndarray, scales: jnp.ndarray, *,
+                      bits: int, w_self: float, w_nb: float,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused eq.-7 apply for a flat param vector x [n]."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = x.shape[0]
+    per, w = planar_pad_len(n, bits)
+    x2d = jnp.pad(x.astype(jnp.float32), (0, per * w - n)).reshape(per, w)
+    out2d = dequant_mix_pallas(x2d, q_own, q_left, q_right, scales,
+                               bits=bits, w_self=w_self, w_nb=w_nb,
+                               interpret=interpret)
+    return out2d.reshape(-1)[:n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused heavy-ball update
+# ---------------------------------------------------------------------------
+
+def _pad2d(flat: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    n = flat.shape[0]
+    cols = MS_LANE
+    rows = -(-n // cols)
+    rows = -(-rows // MS_ROW) * MS_ROW
+    pad = rows * cols - n
+    return jnp.pad(flat, (0, pad)).reshape(rows, cols), n
+
+
+def momentum_update_flat(y: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                         eta: float, theta: float,
+                         interpret: bool | None = None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if interpret is None:
+        interpret = default_interpret()
+    y2, n = _pad2d(y)
+    v2, _ = _pad2d(v)
+    g2, _ = _pad2d(g.astype(y.dtype))
+    y_o, v_o = momentum_sgd_pallas(y2, v2, g2, eta=eta, theta=theta,
+                                   interpret=interpret)
+    return y_o.reshape(-1)[:n], v_o.reshape(-1)[:n]
+
+
+def make_fused_momentum_update(interpret: bool | None = None):
+    """Returns fused_fn(y, v, g, eta, theta) -> (y', v') over pytrees,
+    pluggable into core.local_sgd.local_train(fused_update=...)."""
+
+    def fused(y: Pytree, v: Pytree, g: Pytree, eta: float, theta: float):
+        leaves_y, treedef = jax.tree.flatten(y)
+        leaves_v = treedef.flatten_up_to(v)
+        leaves_g = treedef.flatten_up_to(g)
+        outs_y, outs_v = [], []
+        for yl, vl, gl in zip(leaves_y, leaves_v, leaves_g):
+            shp = yl.shape
+            yo, vo = momentum_update_flat(yl.reshape(-1), vl.reshape(-1),
+                                          gl.reshape(-1), eta, theta,
+                                          interpret=interpret)
+            outs_y.append(yo.reshape(shp))
+            outs_v.append(vo.reshape(shp).astype(vl.dtype))
+        return (jax.tree.unflatten(treedef, outs_y),
+                jax.tree.unflatten(treedef, outs_v))
+
+    return fused

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Wire format used by the kernels (differs from core.quantize's sequential
+packing; both are self-consistent pairs and the wire is opaque):
+
+  *planar* packing — a flat tensor of n values is padded to ``per * W``
+  (per = 32 // bits) and viewed as [per, W]; word w packs elements
+  [0, w], [1, w], ..., [per-1, w]:
+
+      word[w] = sum_i (offset_encode(x[i, w]) << (bits * i))
+
+  This keeps every shift/or lane-parallel on the TPU vector unit (the
+  lane axis W is a multiple of 128), instead of gathering 32/b adjacent
+  elements within a lane.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE_BLOCK = 512  # lane-dim block for all kernels (multiple of 128)
+
+
+def planar_pad_len(n: int, bits: int) -> tuple[int, int]:
+    """Return (per, W) with per*W >= n, W a multiple of LANE_BLOCK."""
+    per = 32 // bits
+    w = -(-n // per)
+    w = -(-w // LANE_BLOCK) * LANE_BLOCK
+    return per, w
+
+
+def quantize_pack_ref(x: jnp.ndarray, bits: int, s: jnp.ndarray,
+                      noise: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Quantize flat f32 x (len n) with step s; planar-pack to uint32 [W].
+
+    noise: uniform[0,1) of x.shape for stochastic rounding; None = floor.
+    """
+    n = x.shape[0]
+    per, w = planar_pad_len(n, bits)
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    a = x.astype(jnp.float32) / s
+    k = jnp.floor(a)
+    if noise is not None:
+        k = k + (noise < (a - k)).astype(jnp.float32)
+    k = jnp.clip(k, qmin, qmax).astype(jnp.int32)
+    k = jnp.pad(k, (0, per * w - n))
+    fields = (k + (1 << (bits - 1))).astype(jnp.uint32).reshape(per, w)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[:, None]
+    return (fields << shifts).sum(axis=0, dtype=jnp.uint32)
+
+
+def unpack_dequant_ref(words: jnp.ndarray, bits: int, s: jnp.ndarray,
+                       n: int) -> jnp.ndarray:
+    """Inverse of quantize_pack_ref (up to the quantization itself)."""
+    per = 32 // bits
+    w = words.shape[0]
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[:, None]
+    mask = jnp.uint32((1 << bits) - 1)
+    fields = (words[None, :] >> shifts) & mask
+    k = fields.astype(jnp.int32) - (1 << (bits - 1))
+    return (k.astype(jnp.float32) * s).reshape(per * w)[:n]
+
+
+def dequant_mix_ref(x: jnp.ndarray, q_own: jnp.ndarray, q_left: jnp.ndarray,
+                    q_right: jnp.ndarray, scales: jnp.ndarray, bits: int,
+                    w_self: float, w_nb: float) -> jnp.ndarray:
+    """Fused eq.-7 ring update for one client:
+
+        x + w_self * deq(q_own) + w_nb * deq(q_left) + w_nb * deq(q_right)
+
+    x: flat f32 [n]; q_*: packed uint32 [W]; scales: f32 [3] (own, left,
+    right).
+    """
+    n = x.shape[0]
+    d_own = unpack_dequant_ref(q_own, bits, scales[0], n)
+    d_l = unpack_dequant_ref(q_left, bits, scales[1], n)
+    d_r = unpack_dequant_ref(q_right, bits, scales[2], n)
+    return (x.astype(jnp.float32)
+            + w_self * d_own + w_nb * d_l + w_nb * d_r).astype(x.dtype)
+
+
+def momentum_sgd_ref(y: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                     eta: float, theta: float
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Heavy-ball (paper eq. 4, velocity form):
+        v' = theta*v - eta*g ;  y' = y + v'
+    """
+    v_next = theta * v.astype(jnp.float32) - eta * g.astype(jnp.float32)
+    y_next = y.astype(jnp.float32) + v_next
+    return y_next.astype(y.dtype), v_next.astype(v.dtype)

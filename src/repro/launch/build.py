@@ -1,0 +1,323 @@
+"""Builders shared by dryrun/train/serve: step functions + ShapeDtypeStruct
+inputs + shardings for every (arch x input-shape x mesh) combination.
+
+Nothing here allocates device memory: param/cache shapes come from
+``jax.eval_shape`` and inputs are ShapeDtypeStructs until a real training
+run materializes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from ..core import (DFedAvgMConfig, MixingSpec, RoundState, make_round_step)
+from ..models import model as M
+from ..sharding.rules import (RULES_SERVE, RULES_SERVE_2D, ShardingStrategy,
+                              shapes_and_axes, specs_for_tree, stack_shapes)
+
+Pytree = Any
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_axes(mesh, batch: int) -> tuple[str, ...]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cands = [a for a in ("pod", "data") if a in sizes]
+    total = int(np.prod([sizes[a] for a in cands])) if cands else 1
+    if cands and batch % total == 0:
+        return tuple(cands)
+    if "data" in sizes and batch % sizes["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def _dp_spec(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+@dataclasses.dataclass
+class Built:
+    fn: Any                       # jitted step function
+    args: tuple                   # ShapeDtypeStruct pytrees (lower(*args))
+    meta: dict
+
+
+# ---------------------------------------------------------------------------
+# Training round step (DFedAvgM over the model)
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, mesh, shape: InputShape, *,
+                     strategy: str | None = None,
+                     dfed: DFedAvgMConfig | None = None) -> Built:
+    strat = ShardingStrategy.for_arch(cfg.name, mesh, strategy=strategy)
+    m = strat.num_clients
+    if dfed is None:
+        dfed = DFedAvgMConfig(eta=1e-3, theta=0.9, local_steps=2,
+                              mixer_impl="ring" if strat.client_axes
+                              else "dense")
+    elif not strat.client_axes and dfed.mixer_impl != "dense":
+        # strategy B on a single pod: no client mesh axis -> dense mixer
+        dfed = dataclasses.replace(dfed, mixer_impl="dense")
+    K = dfed.local_steps
+    local_bs = max(1, shape.global_batch // m)
+    seq = shape.seq_len
+
+    shapes, axes = shapes_and_axes(
+        lambda k: M.init_model(k, cfg))
+    stacked = stack_shapes(shapes, m)
+    pspecs = specs_for_tree(axes, stacked, strat.rules, mesh,
+                            leading_client=strat.client_axes)
+
+    spec = MixingSpec.ring(m)
+    loss = lambda p, b, r: M.loss_fn(p, cfg, b, r)
+    step = make_round_step(loss, dfed, spec, mesh=mesh,
+                           client_axes=strat.client_axes,
+                           param_specs=pspecs, with_metrics=True)
+
+    # shard_map'd MoE when tokens are data-sharded (§Perf): local
+    # dispatch + single minimal psum instead of partitioner-chosen
+    # buffer-sized all-gathers/all-reduces.
+    sizes0 = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba0 = tuple(a for a in strat.batch_axes if a in sizes0)
+    if cfg.n_experts > 0 and ba0:
+        from ..models.moe import MOE_SHARD_MAP
+        model_axes = tuple(a for a in ("model",) if a in sizes0)
+        inner_step = step
+
+        def step(state, batches):  # noqa: F811
+            tok = MOE_SHARD_MAP.set((mesh, ba0, model_axes))
+            try:
+                return inner_step(state, batches)
+            finally:
+                MOE_SHARD_MAP.reset(tok)
+
+    tok_sds = jax.ShapeDtypeStruct((m, K, local_bs, seq), jnp.int32)
+    batch_sds = {"tokens": tok_sds, "targets": tok_sds}
+    ca = _dp_spec(strat.client_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = tuple(a for a in strat.batch_axes if a in sizes)
+    if ba and local_bs % int(np.prod([sizes[a] for a in ba])) != 0:
+        ba = ()
+    bspec = _dp_spec(ba)
+    tok_spec = P(ca, None, bspec, None)
+    batch_specs = {"tokens": tok_spec, "targets": tok_spec}
+    if cfg.frontend is not None:
+        batch_sds["frontend"] = jax.ShapeDtypeStruct(
+            (m, K, local_bs, cfg.frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+        batch_specs["frontend"] = P(ca, None, bspec, None, None)
+
+    state_sds = RoundState(
+        params=stacked,
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        round=jax.ShapeDtypeStruct((), jnp.int32))
+    state_specs = RoundState(params=pspecs, rng=P(), round=P())
+
+    metrics_specs = {"loss": P(), "consensus_dist": P(), "local_drift": P()}
+    jit_step = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, state_specs), _ns(mesh, batch_specs)),
+        out_shardings=(_ns(mesh, state_specs), _ns(mesh, metrics_specs)))
+    meta = dict(kind="train", m=m, K=K, local_bs=local_bs, seq=seq,
+                strategy=strat.name, client_axes=strat.client_axes,
+                tokens_per_step=m * K * local_bs * seq,
+                mixer=dfed.mixer_config().resolved_impl(spec, mesh),
+                quant_bits=(dfed.quant.bits if dfed.quant else 32))
+    return Built(fn=jit_step, args=(state_sds, batch_sds), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Serving: consensus-model prefill / decode
+# ---------------------------------------------------------------------------
+
+def _serve_param_specs(cfg: ArchConfig, mesh, shapes, axes):
+    rules = RULES_SERVE_2D if cfg.name.startswith("mixtral") else RULES_SERVE
+    return specs_for_tree(axes, shapes, rules, mesh, leading_client=None)
+
+
+def _cache_specs(caches_shapes, mesh, dp, *,
+                 kv_fallback_headdim: bool = True) -> Pytree:
+    """Stage-aligned cache sharding by leaf name.
+
+    kv_fallback_headdim: when kv_heads doesn't divide the model axis (GQA
+    kv < 16), shard the cache on head_dim instead of replicating it —
+    contraction-dim sharding turns cache-sized all-gathers into
+    score-sized all-reduces (see EXPERIMENTS.md §Perf, qwen3-32b decode).
+    """
+    dps = _dp_spec(dp)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sz = sizes.get("model", 1)
+
+    def by_path(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        shp = leaf.shape
+        if name == "kpos":
+            return P(*([None] * len(shp)))
+        if name in ("k", "v"):          # [n, b, S, kv, hd] or [b, S, kv, hd]
+            kv, hd = shp[-2], shp[-1]
+            if kv % model_sz == 0:
+                kvs, hds = "model", None
+            elif kv_fallback_headdim and hd % model_sz == 0:
+                kvs, hds = None, "model"
+            else:
+                kvs, hds = None, None
+            if len(shp) == 5:
+                return P(None, dps, None, kvs, hds)
+            return P(dps, None, kvs, hds)   # shared block: unstacked
+        if name in ("conv_x", "conv_B", "conv_C"):   # [n, b, 3, c]  # noqa: E501
+            c = shp[-1]
+            return P(None, dps, None,
+                     "model" if c % model_sz == 0 else None)
+        if name == "ssm":               # [n, b, h, n_state, p]
+            h = shp[-3]
+            return P(None, dps,
+                     "model" if h % model_sz == 0 else None, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(by_path, caches_shapes)
+
+
+def build_decode_step(cfg: ArchConfig, mesh, shape: InputShape, *,
+                      cache_headdim: bool = True) -> Built:
+    b = shape.global_batch
+    s_alloc = shape.seq_len
+    dp = _dp_axes(mesh, b)
+    dps = _dp_spec(dp)
+
+    shapes, axes = shapes_and_axes(lambda k: M.init_model(k, cfg))
+    pspecs = _serve_param_specs(cfg, mesh, shapes, axes)
+
+    caches_shapes = jax.eval_shape(
+        lambda: M.init_decode_caches(cfg, b, s_alloc))
+    total_cache_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(caches_shapes))
+    # hd-sharding only pays when the cache is big (replicating a small
+    # cache is free; hd-sharding it adds score ARs — smollm regression,
+    # EXPERIMENTS.md §Perf pair 1).
+    cache_headdim = cache_headdim and total_cache_bytes > 1 << 30
+    cspecs = _cache_specs(caches_shapes, mesh, dp,
+                          kv_fallback_headdim=cache_headdim)
+
+    needs_cross = cfg.frontend is not None
+    cross_sds = (jax.ShapeDtypeStruct(
+        (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if needs_cross else None)
+    cross_spec = P(dps, None, None) if needs_cross else None
+
+    # GQA with kv_heads < model axis + hd-sharded cache: hint q replicated
+    # (tiny) so attention becomes hd-partial scores + small ARs.
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sz = sizes.get("model", 1)
+    hd_fallback = (cache_headdim and cfg.n_kv_heads
+                   and cfg.n_kv_heads % model_sz != 0
+                   and cfg.head_dim % model_sz == 0)
+    q_hint = (NamedSharding(mesh, P(dps, None, None, None))
+              if hd_fallback else None)
+
+    from ..models.attention import DECODE_Q_SPEC
+
+    def _with_hint(thunk):
+        if q_hint is None:
+            return thunk()
+        tok = DECODE_Q_SPEC.set(q_hint)
+        try:
+            return thunk()
+        finally:
+            DECODE_Q_SPEC.reset(tok)
+
+    if needs_cross:
+        def fn(params, token, pos, caches, cross):
+            return _with_hint(lambda: M.decode_step(
+                params, cfg, token, pos, caches, cross_states=cross))
+        args = (shapes, jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32), caches_shapes,
+                cross_sds)
+        in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, P(dps)),
+                 NamedSharding(mesh, P()), _ns(mesh, cspecs),
+                 NamedSharding(mesh, cross_spec))
+    else:
+        def fn(params, token, pos, caches):
+            return _with_hint(lambda: M.decode_step(
+                params, cfg, token, pos, caches))
+        args = (shapes, jax.ShapeDtypeStruct((b,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32), caches_shapes)
+        in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, P(dps)),
+                 NamedSharding(mesh, P()), _ns(mesh, cspecs))
+
+    out_sh = (NamedSharding(mesh, P(dps, None)), _ns(mesh, cspecs))
+    jit_fn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    cache_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(caches_shapes))
+    meta = dict(kind="decode", batch=b, s_alloc=s_alloc, dp=dp,
+                tokens_per_step=b, cache_bytes=cache_bytes)
+    return Built(fn=jit_fn, args=args, meta=meta)
+
+
+def build_prefill_step(cfg: ArchConfig, mesh, shape: InputShape) -> Built:
+    b = shape.global_batch
+    seq = shape.seq_len
+    dp = _dp_axes(mesh, b)
+    dps = _dp_spec(dp)
+
+    shapes, axes = shapes_and_axes(lambda k: M.init_model(k, cfg))
+    pspecs = _serve_param_specs(cfg, mesh, shapes, axes)
+
+    needs_cross = cfg.frontend is not None
+    if needs_cross:
+        cross_sds = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+        def fn(params, tokens, fe):
+            logits, _, _ = M.forward(params, cfg, tokens,
+                                     frontend_embeds=fe, last_only=True)
+            return logits[:, 0]
+        args = (shapes, jax.ShapeDtypeStruct((b, seq), jnp.int32), cross_sds)
+        in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, P(dps, None)),
+                 NamedSharding(mesh, P(dps, None, None)))
+    else:
+        def fn(params, tokens):
+            logits, _, _ = M.forward(params, cfg, tokens, last_only=True)
+            return logits[:, 0]
+        args = (shapes, jax.ShapeDtypeStruct((b, seq), jnp.int32))
+        in_sh = (_ns(mesh, pspecs), NamedSharding(mesh, P(dps, None)))
+
+    jit_fn = jax.jit(fn, in_shardings=in_sh,
+                     out_shardings=NamedSharding(mesh, P(dps, None)))
+    meta = dict(kind="prefill", batch=b, seq=seq, dp=dp,
+                tokens_per_step=b * seq)
+    return Built(fn=jit_fn, args=args, meta=meta)
+
+
+def build_step(cfg: ArchConfig, mesh, shape_name: str, **kw) -> Built:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    return build_decode_step(cfg, mesh, shape)
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
+    """DESIGN.md §5 skips."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 512k dense KV decode has no "
+                "sub-quadratic path (DESIGN.md §5)")
+    return None

@@ -1,0 +1,32 @@
+"""Production mesh construction (v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — jax locks the device count at first backend init, and the dry-run
+must set XLA_FLAGS before that happens.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) ("data", "model").
+    Multi-pod: 2 pods = 512 chips (2, 16, 16) ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small host-device mesh for CPU multi-device tests."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# v5e hardware constants for the roofline analysis (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

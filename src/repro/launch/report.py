@@ -1,0 +1,63 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report [--tag baseline] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load(tag: str | None = None, mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(OUT_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def markdown_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | tag | compute ms | memory ms | "
+           "collective ms | dominant | useful | wire GB/dev | note |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r.get('tag','')} | — | — | — | — | — | — | "
+                f"SKIP: {r['skipped'][:60]} |")
+            continue
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        wire = r["collective_looped"]["wire_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+            f"{fmt_ms(t['compute_s'])} | {fmt_ms(t['memory_s'])} | "
+            f"{fmt_ms(t['collective_s'])} | {r['dominant'][:-2]} | "
+            f"{uf and round(uf, 2)} | {wire:.2f} | "
+            f"compile {r['compile_s']}s |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(markdown_table(load(args.tag, args.mesh)))
+
+
+if __name__ == "__main__":
+    main()

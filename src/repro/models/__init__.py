@@ -1,0 +1,4 @@
+"""Model substrate: assigned architectures + the paper's own nets."""
+from .model import (init_model, forward, loss_fn, init_decode_caches,  # noqa
+                    decode_step, prefill, encode)
+from .frontends import stub_frontend_embeddings, frontend_shape  # noqa

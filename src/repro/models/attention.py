@@ -1,0 +1,239 @@
+"""Attention: GQA/MQA, qk-norm, RoPE, sliding-window, cross-attn, KV cache.
+
+The score computation is *streaming* (online softmax over KV chunks via
+``lax.scan``, queries chunked via ``lax.map``), so peak memory is bounded
+by chunk-sized buffers instead of a [L, L] score matrix — required for the
+32k prefill shapes and the standard TPU-friendly formulation.
+
+KV cache layout (decode):
+  {"k": [b, S_alloc, KV, hd], "v": same, "kpos": [S_alloc] int32}
+``kpos`` stores the absolute position held in each slot (-2^30 = empty),
+which uniformly handles full caches (S_alloc = max_seq, slot = pos) and
+sliding-window ring buffers (S_alloc = window, slot = pos % window):
+masking is always "kpos <= q_pos and q_pos - kpos < window".
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rms_norm_headdim
+
+Pytree = Any
+
+_EMPTY = -(2 ** 30)
+KV_CHUNK = 1024
+Q_CHUNK = 1024
+
+# Serving-time sharding hint (set by launch.build): when decoding with a
+# head_dim-sharded KV cache (GQA kv_heads < model axis), constraining the
+# (tiny) q to replicated makes the SPMD partitioner compute hd-partial
+# scores + small all-reduces instead of all-gathering cache chunks.
+# See EXPERIMENTS.md §Perf (qwen3-32b decode iteration 2).
+import contextvars
+
+DECODE_Q_SPEC: contextvars.ContextVar = contextvars.ContextVar(
+    "DECODE_Q_SPEC", default=None)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, qk_norm: bool, dtype, kv_input_dim: int | None = None
+                   ) -> tuple[Pytree, Pytree]:
+    """kv_input_dim: source dim for K/V projections (cross-attn encoder side
+    or concat tricks); defaults to d_model."""
+    kd = kv_input_dim if kv_input_dim is not None else d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d_model, n_heads, head_dim), dtype,
+                         fan_in=d_model),
+        "wk": dense_init(k2, (kd, n_kv, head_dim), dtype, fan_in=kd),
+        "wv": dense_init(k3, (kd, n_kv, head_dim), dtype, fan_in=kd),
+        "wo": dense_init(k4, (n_heads, head_dim, d_model), dtype,
+                         fan_in=n_heads * head_dim),
+    }
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Streaming scaled-dot-product attention
+# ---------------------------------------------------------------------------
+
+def _attend_qchunk(q, k, v, q_pos, k_pos, *, window: int, causal: bool,
+                   scale: float):
+    """q: [b, Lq, KV, rep, hd]; k/v: [b, S, KV, hd]; q_pos: [Lq];
+    k_pos: [S]. Returns [b, Lq, KV, rep, hd] (f32)."""
+    b, lq, kvh, rep, hd = q.shape
+    s = k.shape[1]
+    ck = min(KV_CHUNK, s)
+    n_chunks = -(-s // ck)
+    pad = n_chunks * ck - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=_EMPTY)
+    kc = k.reshape(b, n_chunks, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, ck, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, ck)
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        kch, vch, pch = chunk                       # [b,ck,kv,hd],[b,ck,kv,hd],[ck]
+        scores = jnp.einsum("blgrd,bsgd->blgrs", qf,
+                            kch.astype(jnp.float32)) * scale
+        valid = pch[None, :] != _EMPTY              # [1, ck] -> broadcast
+        if causal:
+            valid = valid & (pch[None, :] <= q_pos[:, None])
+        if window > 0:
+            valid = valid & (q_pos[:, None] - pch[None, :] < window)
+        neg = jnp.float32(-1e30)
+        scores = jnp.where(valid[None, :, None, None, :], scores, neg)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "blgrs,bsgd->blgrd", p, vch.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, lq, kvh, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, lq, kvh, rep), jnp.float32)
+    a0 = jnp.zeros((b, lq, kvh, rep, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    l = jnp.maximum(l, 1e-30)
+    return acc / l[..., None]
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_positions: jnp.ndarray, k_positions: jnp.ndarray, *,
+           causal: bool, window: int = 0,
+           scale: float | None = None) -> jnp.ndarray:
+    """q: [b, Lq, H, hd]; k/v: [b, S, KV, hd]. Returns [b, Lq, H, hd]."""
+    b, lq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q_spec = DECODE_Q_SPEC.get()
+    if q_spec is not None and lq == 1:
+        q = jax.lax.with_sharding_constraint(q, q_spec)
+    qg = q.reshape(b, lq, kvh, rep, hd)
+
+    if lq <= Q_CHUNK:
+        out = _attend_qchunk(qg, k, v, q_positions, k_positions,
+                             window=window, causal=causal, scale=scale)
+        return out.reshape(b, lq, h, hd).astype(q.dtype)
+
+    qc = Q_CHUNK
+    n_q = -(-lq // qc)
+    pad = n_q * qc - lq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad))
+    qs = qg.reshape(b, n_q, qc, kvh, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    ps = q_positions.reshape(n_q, qc)
+
+    def one(args):
+        qi, pi = args
+        return _attend_qchunk(qi, k, v, pi, k_positions, window=window,
+                              causal=causal, scale=scale)
+
+    out = jax.lax.map(one, (qs, ps))                # [n_q, b, qc, kv, rep, hd]
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, n_q * qc, h, hd)
+    return out[:, :lq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, s_alloc: int, n_kv: int, head_dim: int,
+                  dtype) -> Pytree:
+    return {
+        "k": jnp.zeros((batch, s_alloc, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, s_alloc, n_kv, head_dim), dtype),
+        "kpos": jnp.full((s_alloc,), _EMPTY, jnp.int32),
+    }
+
+
+def apply_attention(params: Pytree, x: jnp.ndarray, *, n_heads: int,
+                    n_kv: int, qk_norm: bool, rope_theta: float,
+                    positions: jnp.ndarray, causal: bool = True,
+                    window: int = 0, cache: Pytree | None = None,
+                    cross_kv: jnp.ndarray | None = None,
+                    kv_positions: jnp.ndarray | None = None
+                    ) -> tuple[jnp.ndarray, Pytree | None]:
+    """x: [b, Lq, d_model]; positions: [Lq] absolute positions of x.
+
+    cross_kv: encoder states [b, S_enc, kd] for cross-attention (cache is
+    then a precomputed {"k","v","kpos"} built once per request, or None to
+    project on the fly).
+    Returns (out [b, Lq, d_model], updated cache or None).
+    """
+    b, lq, _ = x.shape
+    hd = params["wq"].shape[-1]
+    q = jnp.einsum("bld,dhk->blhk", x, params["wq"])
+    if qk_norm:
+        q = rms_norm_headdim(q, params["q_norm"])
+
+    kv_src = cross_kv if cross_kv is not None else x
+    new_cache = None
+
+    if cross_kv is not None:
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"])
+        if qk_norm:
+            k = rms_norm_headdim(k, params["k_norm"])
+        kp = (kv_positions if kv_positions is not None
+              else jnp.arange(kv_src.shape[1], dtype=jnp.int32))
+        out = attend(q, k, v, positions, kp, causal=False, window=0)
+    else:
+        k = jnp.einsum("bld,dhk->blhk", x, params["wk"])
+        v = jnp.einsum("bld,dhk->blhk", x, params["wv"])
+        if qk_norm:
+            k = rms_norm_headdim(k, params["k_norm"])
+        if rope_theta > 0:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        if cache is not None:
+            s_alloc = cache["k"].shape[1]
+            slots = positions % s_alloc
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (0, slots[0], 0, 0)) if lq > 1 else \
+                cache["k"].at[:, slots[0]].set(k[:, 0].astype(cache["k"].dtype))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (0, slots[0], 0, 0)) if lq > 1 else \
+                cache["v"].at[:, slots[0]].set(v[:, 0].astype(cache["v"].dtype))
+            kpos = jax.lax.dynamic_update_slice(cache["kpos"], positions,
+                                                (slots[0],)) if lq > 1 else \
+                cache["kpos"].at[slots[0]].set(positions[0])
+            new_cache = {"k": ck, "v": cv, "kpos": kpos}
+            out = attend(q, ck, cv, positions, kpos, causal=causal,
+                         window=window)
+        else:
+            kp = positions
+            out = attend(q, k, v, positions, kp, causal=causal,
+                         window=window)
+
+    y = jnp.einsum("blhk,hkd->bld", out, params["wo"])
+    return y, new_cache

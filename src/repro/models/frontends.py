@@ -1,0 +1,33 @@
+"""STUB modality frontends (the one allowed carve-out, see DESIGN.md §5).
+
+[audio] whisper: the mel-spectrogram + conv feature extractor is stubbed;
+we supply frame embeddings [b, frontend_tokens, d_model] directly (whisper
+tiny: 30 s -> 1500 frames after the conv stride-2).
+
+[vlm] llama-3.2-vision: the ViT tower + adapter is stubbed; we supply
+patch/tile embeddings [b, frontend_tokens, d_model] (one 448px tile ->
+1601 patch tokens in the model card; the projector in model.py is real).
+
+The generator is deterministic in (seed, shape) so tests are reproducible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def frontend_shape(cfg: ArchConfig, batch: int) -> tuple[int, int, int]:
+    if cfg.frontend is None:
+        raise ValueError(f"{cfg.name} has no frontend")
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def stub_frontend_embeddings(cfg: ArchConfig, batch: int,
+                             seed: int = 0) -> jnp.ndarray:
+    """Deterministic stand-in for precomputed frame/patch embeddings."""
+    shape = frontend_shape(cfg, batch)
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, shape, jnp.float32)
+            .astype(jnp.dtype(cfg.dtype)))

@@ -1,0 +1,142 @@
+"""Shared neural-net building blocks (functional style).
+
+Every ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the
+params pytree with tuples of *logical axis names* per dimension —
+consumed by ``repro.sharding.rules`` to build PartitionSpecs. Logical
+names: embed, vocab, heads, kv_heads, head_dim, mlp, experts, ssm_inner,
+ssm_state, ssm_heads, conv, seq, layers (scan axis), None.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype) -> tuple[Pytree, Pytree]:
+    if kind == "nonparam_ln":      # OLMo: LayerNorm without scale/bias
+        return {}, {}
+    if kind in ("rmsnorm", "layernorm"):
+        p = {"scale": jnp.ones((d,), dtype=dtype)}
+        a = {"scale": ("embed",)}
+        if kind == "layernorm":
+            p["bias"] = jnp.zeros((d,), dtype=dtype)
+            a["bias"] = ("embed",)
+        return p, a
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(kind: str, params: Pytree, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    if kind in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) \
+                + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    raise ValueError(kind)
+
+
+def rms_norm_headdim(x: jnp.ndarray, scale: jnp.ndarray,
+                     eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm (Qwen3): RMS-normalize the last (head_dim) axis."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fi = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fi, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / ReLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype
+             ) -> tuple[Pytree, Pytree]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        p = {"wg": dense_init(k1, (d_model, d_ff), dtype),
+             "wu": dense_init(k2, (d_model, d_ff), dtype),
+             "wd": dense_init(k3, (d_ff, d_model), dtype, fan_in=d_ff)}
+        a = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+             "wd": ("mlp", "embed")}
+    elif kind == "relu":
+        p = {"wu": dense_init(k1, (d_model, d_ff), dtype),
+             "wd": dense_init(k2, (d_ff, d_model), dtype, fan_in=d_ff)}
+        a = {"wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    else:
+        raise ValueError(f"unknown mlp {kind!r}")
+    return p, a
+
+
+def apply_mlp(kind: str, params: Pytree, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["wg"], approximate=True) * (x @ params["wu"])
+    elif kind == "relu":
+        h = jax.nn.relu(x @ params["wu"])
+    else:
+        raise ValueError(kind)
+    return h @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype
+                   ) -> tuple[Pytree, Pytree]:
+    p = {"table": dense_init(key, (vocab, d_model), dtype, fan_in=d_model)}
+    return p, {"table": ("vocab", "embed")}
+
+
+def embed_tokens(params: Pytree, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def logits_from_embedding(params: Pytree, h: jnp.ndarray) -> jnp.ndarray:
+    return h @ params["table"].T

@@ -1,0 +1,210 @@
+"""Model wrappers: decoder LM, encoder-decoder (whisper), VLM (llama-3.2-v).
+
+Public functional API (everything is (params, cfg)-explicit, jit/vmap
+friendly):
+
+  init_model(key, cfg)                  -> (params, axes)
+  forward(params, cfg, tokens, ...)     -> (logits, new_caches, aux)
+  loss_fn(params, cfg, batch, rng)      -> scalar (next-token CE + moe aux)
+  init_decode_caches(cfg, batch, s)     -> caches (stage-aligned list)
+  decode_step(params, cfg, token, pos, caches, ...) -> (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (dense_init, embed_tokens, init_embedding, init_norm,
+                     apply_norm, logits_from_embedding)
+from .transformer import (apply_block, apply_stage, init_block, init_stage,
+                          init_stage_cache, _prepend_layers)
+
+Pytree = Any
+MOE_AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ArchConfig) -> tuple[Pytree, Pytree]:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 16)
+    p: dict = {}
+    a: dict = {}
+
+    p["embed"], a["embed"] = init_embedding(keys[0], cfg.vocab_size, d, dtype)
+    if cfg.pos == "learned":
+        p["pos_embed"] = dense_init(keys[1], (cfg.max_learned_pos(), d),
+                                    dtype, fan_in=d)
+        a["pos_embed"] = ("seq", "embed")
+
+    stages = cfg.stages()
+    p["stages"], a["stages"] = [], []
+    skeys = jax.random.split(keys[2], len(stages))
+    for (kind, n), sk in zip(stages, skeys):
+        sp, sa = init_stage(sk, cfg, kind, n)
+        p["stages"].append(sp)
+        a["stages"].append(sa)
+
+    if any(kind == "shared" for kind, _ in stages):
+        p["shared_attn"], a["shared_attn"] = init_block(keys[3], cfg,
+                                                        "shared")
+
+    if cfg.is_encoder_decoder:
+        ep, ea = init_stage(keys[4], cfg, "enc", cfg.encoder_layers)
+        p["enc_stage"], a["enc_stage"] = ep, ea
+        p["enc_pos"] = dense_init(keys[5],
+                                  (max(cfg.frontend_tokens, 1), d), dtype,
+                                  fan_in=d)
+        a["enc_pos"] = ("seq", "embed")
+        p["enc_norm"], a["enc_norm"] = init_norm(cfg.norm, d, dtype)
+
+    if cfg.frontend == "vision":
+        p["vis_proj"] = dense_init(keys[6], (d, d), dtype)
+        a["vis_proj"] = ("embed", "embed_out")
+
+    p["final_norm"], a["final_norm"] = init_norm(cfg.norm, d, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[7], (d, cfg.vocab_size), dtype)
+        a["lm_head"] = ("embed", "vocab")
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) / frontend handling
+# ---------------------------------------------------------------------------
+
+def encode(params: Pytree, cfg: ArchConfig,
+           frontend_embeds: jnp.ndarray) -> jnp.ndarray:
+    """Audio stub embeddings [b, T, d] -> encoder states [b, T, d]."""
+    t = frontend_embeds.shape[1]
+    x = frontend_embeds + params["enc_pos"][None, :t]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x, _, _ = apply_stage(params["enc_stage"], x, cfg=cfg, kind="enc",
+                          n=cfg.encoder_layers, positions=pos)
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _cross_kv(params: Pytree, cfg: ArchConfig,
+              frontend_embeds: jnp.ndarray | None) -> jnp.ndarray | None:
+    if frontend_embeds is None:
+        return None
+    if cfg.is_encoder_decoder:
+        return encode(params, cfg, frontend_embeds)
+    if cfg.frontend == "vision":
+        return frontend_embeds @ params["vis_proj"]
+    return frontend_embeds
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Pytree, cfg: ArchConfig, tokens: jnp.ndarray, *,
+            positions: jnp.ndarray | None = None,
+            frontend_embeds: jnp.ndarray | None = None,
+            caches: list | None = None,
+            cross_states: jnp.ndarray | None = None,
+            last_only: bool = False
+            ) -> tuple[jnp.ndarray, list | None, jnp.ndarray]:
+    """tokens: [b, l]. Returns (logits [b, l, vocab], caches', aux).
+    last_only: compute logits for the final position only (prefill serving
+    path — avoids materializing [b, l, vocab])."""
+    b, l = tokens.shape
+    if positions is None:
+        positions = jnp.arange(l, dtype=jnp.int32)
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)[None]
+    x_first = x
+
+    cross_kv = (cross_states if cross_states is not None
+                else _cross_kv(params, cfg, frontend_embeds))
+
+    stages = cfg.stages()
+    new_caches: list = []
+    aux = jnp.zeros((), jnp.float32)
+    for si, (kind, n) in enumerate(stages):
+        cache_i = caches[si] if caches is not None else None
+        x, nc, a = apply_stage(
+            params["stages"][si], x, cfg=cfg, kind=kind, n=n,
+            positions=positions, cache=cache_i, cross_kv=cross_kv,
+            x_first=x_first,
+            shared_params=params.get("shared_attn"))
+        new_caches.append(nc)
+        aux = aux + a
+
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embed"], x)
+    else:
+        logits = x @ params["lm_head"]
+    return logits, (new_caches if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Pytree, cfg: ArchConfig, batch: dict,
+            rng=None) -> jnp.ndarray:
+    """batch: {"tokens": [b,l], "targets": [b,l], "frontend"?: [b,T,d]}."""
+    logits, _, aux = forward(params, cfg, batch["tokens"],
+                             frontend_embeds=batch.get("frontend"))
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = batch["targets"]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is not None:
+        nll = jnp.where(mask, nll, 0.0)
+        loss = nll.sum() / jnp.clip(mask.sum(), 1)
+    else:
+        loss = nll.mean()
+    return loss + MOE_AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_caches(cfg: ArchConfig, batch: int, s_alloc: int,
+                       dtype=None) -> list:
+    dtype = dtype if dtype is not None else jnp.dtype(cfg.dtype)
+    return [init_stage_cache(cfg, kind, n, batch, s_alloc, dtype)
+            for kind, n in cfg.stages()]
+
+
+def decode_step(params: Pytree, cfg: ArchConfig, token: jnp.ndarray,
+                pos: jnp.ndarray, caches: list, *,
+                cross_states: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, list]:
+    """One-token decode. token: [b]; pos: scalar int32 (same for batch).
+    cross_states: precomputed encoder/vision states (whisper/vlm).
+    Returns (logits [b, vocab], new caches)."""
+    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 \
+        else pos.astype(jnp.int32)
+    logits, new_caches, _ = forward(
+        params, cfg, token[:, None], positions=positions, caches=caches,
+        cross_states=cross_states)
+    return logits[:, 0], new_caches
+
+
+def prefill(params: Pytree, cfg: ArchConfig, tokens: jnp.ndarray,
+            caches: list, *, cross_states: jnp.ndarray | None = None
+            ) -> tuple[jnp.ndarray, list]:
+    """Prefill a request into the caches; returns (last logits, caches)."""
+    l = tokens.shape[1]
+    positions = jnp.arange(l, dtype=jnp.int32)
+    logits, new_caches, _ = forward(params, cfg, tokens, positions=positions,
+                                    caches=caches, cross_states=cross_states)
+    return logits[:, -1], new_caches

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded expert dispatch.
+
+Dispatch is sort-based (dropless up to a capacity factor) and
+**gather-only**: tokens are ranked within their expert via an argsort and
+*gathered* into a [groups, E, capacity, d] buffer; the combine is a
+token-ordered reshape+sum. No scatter appears in the forward pass —
+XLA's SPMD partitioner falls back to all-reducing dense update buffers
+for scatters (measured: tens of TB on mixtral train, EXPERIMENTS.md
+§Perf), while gathers stay local.
+
+Grouping (GShard-style): tokens are split into ``n_groups`` independent
+dispatch groups, batched NATIVELY (a leading ``g`` axis on every op, not
+an inner vmap — sharding constraints do not survive nested vmap), so the
+argsort/dispatch is local to each data shard when the group axis is
+sharded. ``MOE_GROUPS`` (set by launch.build) provides (n_groups,
+NamedSharding|None).
+
+Expert weights are stacked on a leading "experts" axis -> expert-parallel
+sharding over the mesh "model" axis when divisible.
+
+Load-balance auxiliary loss: Switch-style  E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Pytree = Any
+
+MOE_GROUPS: contextvars.ContextVar = contextvars.ContextVar(
+    "MOE_GROUPS", default=None)
+
+# shard_map mode (set by launch.build for sharded-batch training): value
+# (mesh, data_axes, model_axes). The whole MoE block runs under shard_map:
+# dispatch (sort/gather) is PROVABLY local to each data shard, expert
+# weights stay model-sharded on d_ff, and the only collective is one
+# minimal psum of the [tokens_local, d] output over the model axis.
+# Rationale: the auto-partitioner all-gathers the grouped dispatch even
+# with correct sharding constraints (data-dependent batched gathers defeat
+# its gather partitioning) — measured in EXPERIMENTS.md §Perf.
+MOE_SHARD_MAP: contextvars.ContextVar = contextvars.ContextVar(
+    "MOE_SHARD_MAP", default=None)
+
+
+def init_moe(key, d_model: int, n_experts: int, d_ff: int, dtype
+             ) -> tuple[Pytree, Pytree]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d_model, n_experts), jnp.float32),
+        "wg": dense_init(k2, (n_experts, d_model, d_ff), dtype,
+                         fan_in=d_model),
+        "wu": dense_init(k3, (n_experts, d_model, d_ff), dtype,
+                         fan_in=d_model),
+        "wd": dense_init(k4, (n_experts, d_ff, d_model), dtype, fan_in=d_ff),
+    }
+    a = {
+        "router": ("embed", "experts"),
+        "wg": ("experts", "embed", "mlp"),
+        "wu": ("experts", "embed", "mlp"),
+        "wd": ("experts", "mlp", "embed"),
+    }
+    return p, a
+
+
+def apply_moe(params: Pytree, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b, l, d]. Returns (out [b, l, d], load_balance_loss scalar)."""
+    b, l, d = x.shape
+    t = b * l
+    smap = MOE_SHARD_MAP.get()
+    if smap is not None:
+        out, aux = _moe_shard_mapped(params, x.reshape(t, d), smap,
+                                     top_k=top_k,
+                                     capacity_factor=capacity_factor)
+        if out is not None:
+            return out.reshape(b, l, d), aux
+    g, sharding = 1, None
+    grouping = MOE_GROUPS.get()
+    if grouping is not None:
+        gg, sh = grouping
+        if t % gg == 0 and t // gg > 0:
+            g, sharding = gg, sh
+    xg = x.reshape(g, t // g, d)
+    if sharding is not None:
+        xg = jax.lax.with_sharding_constraint(xg, sharding)
+    out, aux = _moe_grouped(params, xg, top_k=top_k,
+                            capacity_factor=capacity_factor)
+    return out.reshape(b, l, d), aux
+
+
+def _moe_shard_mapped(params: Pytree, xt: jnp.ndarray, smap, *, top_k: int,
+                      capacity_factor: float):
+    """shard_map MoE: xt [t, d] grouped over the data axes; expert d_ff
+    over the model axes; one psum of [t_local, d] per application."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    mesh, data_axes, model_axes = smap
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    g = int(np.prod([sizes[a] for a in data_axes])) if data_axes else 1
+    t, d = xt.shape
+    f = params["wg"].shape[-1]
+    msz = int(np.prod([sizes[a] for a in model_axes])) if model_axes else 1
+    if g <= 1 or t % g or f % msz:
+        return None, None
+    da = tuple(data_axes)
+    ma = tuple(model_axes)
+    das = da if len(da) > 1 else da[0]
+    mas = ma if len(ma) > 1 else ma[0]
+    xg = xt.reshape(g, t // g, d)
+
+    def body(xb, router, wg, wu, wd):
+        # xb: [1, tg, d] local group; wg/wu: [e, d, f/m]; wd: [e, f/m, d]
+        p = {"router": router, "wg": wg, "wu": wu, "wd": wd}
+        out, aux = _moe_grouped(p, xb, top_k=top_k,
+                                capacity_factor=capacity_factor)
+        for a in ma:                         # wd contracted local f shard
+            out = jax.lax.psum(out, a)
+        for a in da + ma:
+            aux = jax.lax.pmean(aux, a)
+        return out, aux
+
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(das, None, None), P(None, None),
+                  P(None, None, mas), P(None, None, mas),
+                  P(None, mas, None)),
+        out_specs=(P(das, None, None), P()),
+        check_vma=False)(
+        xg, params["router"], params["wg"], params["wu"], params["wd"])
+    return out.reshape(t, d), aux
+
+
+def _moe_grouped(params: Pytree, xg: jnp.ndarray, *, top_k: int,
+                 capacity_factor: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Route grouped tokens. xg: [g, tg, d] -> ([g, tg, d], aux scalar).
+    All ops carry the leading group axis natively (no inner vmap)."""
+    g, tg, d = xg.shape
+    e = params["router"].shape[1]
+    k = top_k
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # [g, tg, e]
+    gate_vals, idx = jax.lax.top_k(probs, k)                  # [g, tg, k]
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance loss (Switch): E * sum_e f_e * p_e ---------------
+    me = probs.mean(axis=(0, 1))                              # [e]
+    ce = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- capacity & ranking (per group) ---------------------------------
+    cap = max(1, int(capacity_factor * k * tg / e))
+    tk = tg * k
+    flat_e = idx.reshape(g, tk)                               # [g, tk]
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    erange = jnp.arange(e)
+    grp_start = jax.vmap(
+        lambda s: jnp.searchsorted(s, erange, side="left"))(sorted_e)
+    grp_end = jax.vmap(
+        lambda s: jnp.searchsorted(s, erange, side="right"))(sorted_e)
+    rank_sorted = (jnp.arange(tk)[None, :]
+                   - jnp.take_along_axis(grp_start, sorted_e, axis=-1))
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    rank = jnp.take_along_axis(rank_sorted, inv, axis=-1).astype(jnp.int32)
+    keep = rank < cap                                         # [g, tk]
+    safe_rank = jnp.where(keep, rank, 0)
+
+    # ---- dispatch: batched gather into [g, e, cap, d] -------------------
+    pos = grp_start[:, :, None] + jnp.arange(cap)[None, None, :]  # [g,e,cap]
+    valid = pos < grp_end[:, :, None]
+    pos_flat = jnp.clip(pos.reshape(g, e * cap), 0, tk - 1)
+    src_assign = jnp.take_along_axis(order, pos_flat, axis=-1)    # [g, e*cap]
+    src_tok = src_assign // k                                     # token ids
+    buf = jnp.take_along_axis(xg, src_tok[:, :, None], axis=1)
+    buf = buf.reshape(g, e, cap, d)
+    buf = jnp.where(valid[..., None], buf, 0).astype(xg.dtype)
+
+    # ---- expert FFN (batched over groups x experts; SwiGLU) -------------
+    hg = jnp.einsum("gecd,edf->gecf", buf, params["wg"])
+    hu = jnp.einsum("gecd,edf->gecf", buf, params["wu"])
+    hidden = jax.nn.silu(hg) * hu
+    out_buf = jnp.einsum("gecf,efd->gecd", hidden, params["wd"])
+
+    # ---- combine: batched gather; token-ordered reshape+sum, no scatter -
+    slot = flat_e * cap + safe_rank                           # [g, tk]
+    gathered = jnp.take_along_axis(out_buf.reshape(g, e * cap, d),
+                                   slot[:, :, None], axis=1)  # [g, tk, d]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    weighted = gathered * gate_vals.reshape(g, tk, 1).astype(gathered.dtype)
+    out = weighted.reshape(g, tg, k, d).sum(axis=2)
+    return out.astype(xg.dtype), aux

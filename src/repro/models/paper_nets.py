@@ -1,0 +1,204 @@
+"""The paper's OWN experimental models (§6), in JAX.
+
+  2NN      — MLP, 2 hidden layers x 200 ReLU units (199,210 params on
+             784->10 MNIST-shaped data)                         [Fig 4-6]
+  CNN      — 2x conv5x5 (32, 64) + 2x2 maxpool + fc512 + softmax
+             (1,663,370 params at 28x28x1)                      [Fig 2-3]
+  CharLSTM — 8-dim char embedding -> 2x LSTM(256) -> softmax    [Fig 7]
+  MiniResNet — small ResNet for the CIFAR-like bench            [Fig 8]
+
+These run the faithful-scale repro benches on CPU; the assigned 10
+architectures exercise the framework at production scale.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# 2NN
+# ---------------------------------------------------------------------------
+
+def init_2nn(key, *, d_in: int = 784, d_hidden: int = 200,
+             n_classes: int = 10, dtype=jnp.float32) -> Pytree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_in, d_hidden), dtype),
+        "b1": jnp.zeros((d_hidden,), dtype),
+        "w2": dense_init(k2, (d_hidden, d_hidden), dtype),
+        "b2": jnp.zeros((d_hidden,), dtype),
+        "w3": dense_init(k3, (d_hidden, n_classes), dtype),
+        "b3": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def apply_2nn(params: Pytree, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper's MNIST CNN)
+# ---------------------------------------------------------------------------
+
+def init_cnn(key, *, in_ch: int = 1, n_classes: int = 10, img: int = 28,
+             dtype=jnp.float32) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    side = img // 4            # two 2x2 maxpools
+    return {
+        "c1": dense_init(k1, (5, 5, in_ch, 32), dtype, fan_in=25 * in_ch),
+        "cb1": jnp.zeros((32,), dtype),
+        "c2": dense_init(k2, (5, 5, 32, 64), dtype, fan_in=25 * 32),
+        "cb2": jnp.zeros((64,), dtype),
+        "w1": dense_init(k3, (side * side * 64, 512), dtype),
+        "b1": jnp.zeros((512,), dtype),
+        "w2": dense_init(k4, (512, n_classes), dtype),
+        "b2": jnp.zeros((n_classes,), dtype),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def apply_cnn(params: Pytree, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [b, H, W, C]."""
+    h = _maxpool2(_conv(x, params["c1"], params["cb1"]))
+    h = _maxpool2(_conv(h, params["c2"], params["cb2"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Char-LSTM (paper's Shakespeare model)
+# ---------------------------------------------------------------------------
+
+def init_lstm_cell(key, d_in: int, d_h: int, dtype=jnp.float32) -> Pytree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": dense_init(k1, (d_in, 4 * d_h), dtype),
+        "wh": dense_init(k2, (d_h, 4 * d_h), dtype, fan_in=d_h),
+        "b": jnp.zeros((4 * d_h,), dtype),
+    }
+
+
+def lstm_cell(params: Pytree, carry, x):
+    h, c = carry
+    gates = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def init_charlstm(key, *, vocab: int = 90, d_embed: int = 8,
+                  d_h: int = 256, dtype=jnp.float32) -> Pytree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": dense_init(k1, (vocab, d_embed), dtype, fan_in=d_embed),
+        "l1": init_lstm_cell(k2, d_embed, d_h, dtype),
+        "l2": init_lstm_cell(k3, d_h, d_h, dtype),
+        "out": dense_init(k4, (d_h, vocab), dtype),
+        "out_b": jnp.zeros((vocab,), dtype),
+    }
+
+
+def apply_charlstm(params: Pytree, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [b, l] -> logits [b, l, vocab]."""
+    b, l = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)        # [b, l, e]
+    d_h = params["l1"]["wh"].shape[0]
+
+    def run_layer(cell, seq):
+        init = (jnp.zeros((b, d_h), seq.dtype), jnp.zeros((b, d_h), seq.dtype))
+        _, hs = jax.lax.scan(lambda c, xt: lstm_cell(cell, c, xt), init,
+                             seq.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2)
+
+    h = run_layer(params["l1"], x)
+    h = run_layer(params["l2"], h)
+    return h @ params["out"] + params["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# Mini ResNet (CIFAR-like bench; ResNet20-family, narrower for CPU)
+# ---------------------------------------------------------------------------
+
+def init_miniresnet(key, *, in_ch: int = 3, width: int = 8,
+                    n_classes: int = 10, blocks: int = 2,
+                    dtype=jnp.float32) -> Pytree:
+    ks = iter(jax.random.split(key, 4 + 4 * blocks * 3))
+    p: dict = {"stem": dense_init(next(ks), (3, 3, in_ch, width), dtype,
+                                  fan_in=9 * in_ch),
+               "stem_b": jnp.zeros((width,), dtype)}
+    ch = width
+    for s, stride in enumerate((1, 2, 2)):
+        out_ch = width * (2 ** s)
+        for bl in range(blocks):
+            pref = f"s{s}b{bl}"
+            st = stride if bl == 0 else 1
+            p[pref + "_c1"] = dense_init(next(ks), (3, 3, ch, out_ch), dtype,
+                                         fan_in=9 * ch)
+            p[pref + "_b1"] = jnp.zeros((out_ch,), dtype)
+            p[pref + "_c2"] = dense_init(next(ks), (3, 3, out_ch, out_ch),
+                                         dtype, fan_in=9 * out_ch)
+            p[pref + "_b2"] = jnp.zeros((out_ch,), dtype)
+            if st != 1 or ch != out_ch:
+                p[pref + "_sc"] = dense_init(next(ks), (1, 1, ch, out_ch),
+                                             dtype, fan_in=ch)
+            ch = out_ch
+    p["head"] = dense_init(next(ks), (ch, n_classes), dtype)
+    p["head_b"] = jnp.zeros((n_classes,), dtype)
+    return p
+
+
+def apply_miniresnet(params: Pytree, x: jnp.ndarray, *, width: int = 8,
+                     blocks: int = 2) -> jnp.ndarray:
+    def conv(x, w, stride=1):
+        return jax.lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    h = jax.nn.relu(conv(x, params["stem"]) + params["stem_b"])
+    for s, stride in enumerate((1, 2, 2)):
+        for bl in range(blocks):
+            pref = f"s{s}b{bl}"
+            st = stride if bl == 0 else 1
+            y = jax.nn.relu(conv(h, params[pref + "_c1"], st)
+                            + params[pref + "_b1"])
+            y = conv(y, params[pref + "_c2"]) + params[pref + "_b2"]
+            sc = conv(h, params[pref + "_sc"], st) if pref + "_sc" in params \
+                else h
+            h = jax.nn.relu(y + sc)
+    h = h.mean(axis=(1, 2))
+    return h @ params["head"] + params["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Shared loss helpers for the repro benches
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+
+
+def count_params(params: Pytree) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

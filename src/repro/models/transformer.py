@@ -1,0 +1,269 @@
+"""Transformer block zoo + scanned stages.
+
+Block kinds (cfg.block_pattern()):
+  dense  — self-attn + MLP                       (llama/olmo/gemma/qwen...)
+  moe    — self-attn + MoE FFN                   (mixtral, qwen3-moe)
+  ssm    — Mamba2 mixer block                    (mamba2)
+  shared — zamba2 shared attn block over concat(h, h0); weights shared
+           across all its occurrences, each occurrence has its OWN cache
+  xattn  — gated cross-attn + MLP                (llama-3.2-vision layers)
+  cross  — self-attn + cross-attn + MLP          (whisper decoder)
+  enc    — non-causal self-attn + MLP            (whisper encoder)
+
+Layers of one *stage* (a run of identical kinds) are stacked on a leading
+"layers" axis and executed with ``lax.scan`` — compile time is O(distinct
+stages), not O(n_layers). Activation checkpointing (cfg.remat) wraps the
+scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import apply_attention, init_attention, init_kv_cache
+from .layers import (apply_mlp, apply_norm, dense_init, init_mlp, init_norm)
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba2, init_mamba2, init_mamba2_cache
+
+Pytree = Any
+
+_IS_TUPLE = lambda x: isinstance(x, tuple)
+
+
+def _prepend_layers(axes: Pytree) -> Pytree:
+    return jax.tree.map(lambda t: ("layers", *t), axes, is_leaf=_IS_TUPLE)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str) -> tuple[Pytree, Pytree]:
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+
+    def attn(k, d_model, kv_dim=None):
+        return init_attention(k, d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, qk_norm=cfg.qk_norm, dtype=dtype,
+                              kv_input_dim=kv_dim)
+
+    if kind in ("dense", "enc"):
+        p_attn, a_attn = attn(ks[0], d)
+        p_mlp, a_mlp = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp, dtype)
+        p_n1, a_n1 = init_norm(cfg.norm, d, dtype)
+        p_n2, a_n2 = init_norm(cfg.norm, d, dtype)
+        return ({"ln1": p_n1, "attn": p_attn, "ln2": p_n2, "mlp": p_mlp},
+                {"ln1": a_n1, "attn": a_attn, "ln2": a_n2, "mlp": a_mlp})
+
+    if kind == "moe":
+        p_attn, a_attn = attn(ks[0], d)
+        p_moe, a_moe = init_moe(ks[1], d, cfg.n_experts, cfg.moe_d_ff, dtype)
+        p_n1, a_n1 = init_norm(cfg.norm, d, dtype)
+        p_n2, a_n2 = init_norm(cfg.norm, d, dtype)
+        return ({"ln1": p_n1, "attn": p_attn, "ln2": p_n2, "moe": p_moe},
+                {"ln1": a_n1, "attn": a_attn, "ln2": a_n2, "moe": a_moe})
+
+    if kind == "ssm":
+        p_m, a_m = init_mamba2(ks[0], d, cfg.ssm_state,
+                               expand=cfg.ssm_expand,
+                               head_dim=cfg.ssm_head_dim, dtype=dtype)
+        p_n, a_n = init_norm(cfg.norm, d, dtype)
+        return {"ln": p_n, "mixer": p_m}, {"ln": a_n, "mixer": a_m}
+
+    if kind == "xattn":
+        p_x, a_x = attn(ks[0], d, kv_dim=d)
+        p_mlp, a_mlp = init_mlp(ks[1], d, cfg.d_ff, cfg.mlp, dtype)
+        p_n1, a_n1 = init_norm(cfg.norm, d, dtype)
+        p_n2, a_n2 = init_norm(cfg.norm, d, dtype)
+        return ({"ln1": p_n1, "xattn": p_x, "ln2": p_n2, "mlp": p_mlp,
+                 "gate_attn": jnp.zeros((1,), dtype),
+                 "gate_mlp": jnp.zeros((1,), dtype)},
+                {"ln1": a_n1, "xattn": a_x, "ln2": a_n2, "mlp": a_mlp,
+                 "gate_attn": (None,), "gate_mlp": (None,)})
+
+    if kind == "cross":
+        p_attn, a_attn = attn(ks[0], d)
+        p_x, a_x = attn(ks[1], d, kv_dim=d)
+        p_mlp, a_mlp = init_mlp(ks[2], d, cfg.d_ff, cfg.mlp, dtype)
+        p_n1, a_n1 = init_norm(cfg.norm, d, dtype)
+        p_nx, a_nx = init_norm(cfg.norm, d, dtype)
+        p_n2, a_n2 = init_norm(cfg.norm, d, dtype)
+        return ({"ln1": p_n1, "attn": p_attn, "lnx": p_nx, "xattn": p_x,
+                 "ln2": p_n2, "mlp": p_mlp},
+                {"ln1": a_n1, "attn": a_attn, "lnx": a_nx, "xattn": a_x,
+                 "ln2": a_n2, "mlp": a_mlp})
+
+    if kind == "shared":
+        d2 = 2 * d
+        p_attn, a_attn = attn(ks[0], d2)
+        p_mlp, a_mlp = init_mlp(ks[1], d2, cfg.d_ff, cfg.mlp, dtype)
+        p_n1, a_n1 = init_norm(cfg.norm, d2, dtype)
+        p_n2, a_n2 = init_norm(cfg.norm, d2, dtype)
+        return ({"ln1": p_n1, "attn": p_attn, "ln2": p_n2, "mlp": p_mlp,
+                 "down": dense_init(ks[2], (d2, d), dtype, fan_in=d2)},
+                {"ln1": a_n1, "attn": a_attn, "ln2": a_n2, "mlp": a_mlp,
+                 "down": ("embed2", "embed")})
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Per-kind block apply
+# ---------------------------------------------------------------------------
+
+def apply_block(params: Pytree, x: jnp.ndarray, *, cfg: ArchConfig,
+                kind: str, positions: jnp.ndarray,
+                cache: Pytree | None = None,
+                cross_kv: jnp.ndarray | None = None,
+                x_first: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, Pytree | None, jnp.ndarray]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    rope = cfg.rope_theta if cfg.pos == "rope" else 0.0
+    zero = jnp.zeros((), jnp.float32)
+
+    def self_attn(p, h, cache, causal=True, window=None):
+        return apply_attention(
+            p, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            qk_norm=cfg.qk_norm, rope_theta=rope, positions=positions,
+            causal=causal,
+            window=cfg.sliding_window if window is None else window,
+            cache=cache)
+
+    if kind in ("dense", "enc"):
+        h, nc = self_attn(params["attn"],
+                          apply_norm(cfg.norm, params["ln1"], x), cache,
+                          causal=(kind == "dense"))
+        x = x + h
+        x = x + apply_mlp(cfg.mlp, params["mlp"],
+                          apply_norm(cfg.norm, params["ln2"], x))
+        return x, nc, zero
+
+    if kind == "moe":
+        h, nc = self_attn(params["attn"],
+                          apply_norm(cfg.norm, params["ln1"], x), cache)
+        x = x + h
+        mo, aux = apply_moe(params["moe"],
+                            apply_norm(cfg.norm, params["ln2"], x),
+                            top_k=cfg.experts_per_token,
+                            capacity_factor=cfg.moe_capacity_factor)
+        return x + mo, nc, aux
+
+    if kind == "ssm":
+        h, nc = apply_mamba2(params["mixer"],
+                             apply_norm(cfg.norm, params["ln"], x),
+                             head_dim=cfg.ssm_head_dim, cache=cache)
+        return x + h, nc, zero
+
+    if kind == "xattn":
+        h, _ = apply_attention(
+            params["xattn"], apply_norm(cfg.norm, params["ln1"], x),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, qk_norm=cfg.qk_norm,
+            rope_theta=0.0, positions=positions, cross_kv=cross_kv)
+        x = x + jnp.tanh(params["gate_attn"].astype(jnp.float32)
+                         ).astype(x.dtype) * h
+        m = apply_mlp(cfg.mlp, params["mlp"],
+                      apply_norm(cfg.norm, params["ln2"], x))
+        x = x + jnp.tanh(params["gate_mlp"].astype(jnp.float32)
+                         ).astype(x.dtype) * m
+        return x, cache, zero   # cache passes through untouched
+
+    if kind == "cross":
+        h, nc = self_attn(params["attn"],
+                          apply_norm(cfg.norm, params["ln1"], x), cache)
+        x = x + h
+        hx, _ = apply_attention(
+            params["xattn"], apply_norm(cfg.norm, params["lnx"], x),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, qk_norm=cfg.qk_norm,
+            rope_theta=0.0, positions=positions, cross_kv=cross_kv)
+        x = x + hx
+        x = x + apply_mlp(cfg.mlp, params["mlp"],
+                          apply_norm(cfg.norm, params["ln2"], x))
+        return x, nc, zero
+
+    if kind == "shared":
+        h2 = jnp.concatenate([x, x_first], axis=-1)
+        h = apply_norm(cfg.norm, params["ln1"], h2)
+        a_out, nc = self_attn(params["attn"], h, cache, window=0)
+        h2 = h2 + a_out
+        h2 = h2 + apply_mlp(cfg.mlp, params["mlp"],
+                            apply_norm(cfg.norm, params["ln2"], h2))
+        return x + h2 @ params["down"], nc, zero
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stages (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def init_stage(key, cfg: ArchConfig, kind: str, n: int
+               ) -> tuple[Pytree, Pytree]:
+    if kind == "shared":     # params live at model level; stage is empty
+        return {}, {}
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_block(k, cfg, kind)[0])(keys)
+    _, axes = init_block(keys[0], cfg, kind)
+    return params, _prepend_layers(axes)
+
+
+def apply_stage(stage_params: Pytree, x: jnp.ndarray, *, cfg: ArchConfig,
+                kind: str, n: int, positions: jnp.ndarray,
+                cache: Pytree | None = None,
+                cross_kv: jnp.ndarray | None = None,
+                x_first: jnp.ndarray | None = None,
+                shared_params: Pytree | None = None
+                ) -> tuple[jnp.ndarray, Pytree | None, jnp.ndarray]:
+    """Run a stage of n identical blocks. cache: stacked [n, ...] or None.
+    Returns (x, new_cache_stacked, aux_sum)."""
+    if kind == "shared":
+        return apply_block(shared_params, x, cfg=cfg, kind=kind,
+                           positions=positions, cache=cache,
+                           cross_kv=cross_kv, x_first=x_first)
+
+    def block(p, h, c):
+        return apply_block(p, h, cfg=cfg, kind=kind, positions=positions,
+                           cross_kv=cross_kv, x_first=x_first, cache=c)
+
+    if cfg.remat and cache is None:
+        if cfg.remat_policy == "dots":
+            block = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.checkpoint_dots)
+        else:
+            block = jax.checkpoint(block)
+
+    def body(carry, xs):
+        h, aux = carry
+        bp, bc = xs
+        h, nc, a = block(bp, h, bc)
+        return (h, aux + a), nc
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stage_params, cache))
+    return x, new_cache, aux
+
+
+def init_stage_cache(cfg: ArchConfig, kind: str, n: int, batch: int,
+                     s_alloc: int, dtype) -> Pytree:
+    """Stacked decode cache for one stage ([n, ...] leaves)."""
+    if kind == "ssm":
+        one = init_mamba2_cache(batch, cfg.d_model, cfg.ssm_state,
+                                expand=cfg.ssm_expand,
+                                head_dim=cfg.ssm_head_dim, dtype=dtype)
+    elif kind in ("dense", "moe", "cross", "shared"):
+        s = s_alloc
+        if cfg.sliding_window and kind != "shared":
+            s = min(s, cfg.sliding_window)
+        one = init_kv_cache(batch, s, cfg.n_kv_heads, cfg.head_dim, dtype)
+    elif kind in ("xattn", "enc"):
+        return None
+    else:
+        raise ValueError(kind)
+    if kind == "shared":
+        return one
+    return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n,) + t.shape),
+                        one)

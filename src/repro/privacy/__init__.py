@@ -1,0 +1,2 @@
+from .mia import (mia_split, attack_features, train_attack_model,  # noqa
+                  attack_auc, roc_auc, MIASplit)

@@ -1,0 +1,122 @@
+"""Membership-inference attack (paper §6, following Salem et al. / the
+paper's shadow-model protocol):
+
+  1. split the training pool into D_shadow / D_target, each split in half
+     (train / out);
+  2. train a SHADOW model on D_shadow^train; featurize every point in
+     D_shadow by its top-3 predicted class probabilities; label 1 if the
+     point was in D_shadow^train else 0;
+  3. train the ATTACK model (MLP, one hidden layer of 64, softmax) on
+     those features;
+  4. train the TARGET model on D_target^train (with the algorithm under
+     evaluation — DFedAvgM etc.), featurize D_target, and report the
+     attack ROC AUC. AUC 0.5 = perfect membership privacy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.synthetic import ClassificationData
+
+__all__ = ["mia_split", "attack_features", "train_attack_model",
+           "attack_auc", "MIASplit"]
+
+
+@dataclasses.dataclass
+class MIASplit:
+    shadow_train: np.ndarray
+    shadow_out: np.ndarray
+    target_train: np.ndarray
+    target_out: np.ndarray
+
+
+def mia_split(n: int, *, seed: int = 0) -> MIASplit:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    shadow, target = idx[:n // 2], idx[n // 2:]
+    return MIASplit(shadow_train=shadow[:len(shadow) // 2],
+                    shadow_out=shadow[len(shadow) // 2:],
+                    target_train=target[:len(target) // 2],
+                    target_out=target[len(target) // 2:])
+
+
+def attack_features(predict_fn: Callable, x: np.ndarray,
+                    top_k: int = 3) -> np.ndarray:
+    """Top-k softmax probabilities, sorted descending — the attack input."""
+    logits = np.asarray(predict_fn(jnp.asarray(x)))
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    top = jnp.sort(probs, axis=-1)[:, ::-1][:, :top_k]
+    return np.asarray(top, np.float32)
+
+
+def train_attack_model(feats: np.ndarray, labels: np.ndarray, *,
+                       hidden: int = 64, steps: int = 300,
+                       lr: float = 0.05, seed: int = 0):
+    """MLP with one 64-unit hidden layer + softmax (paper's attack model).
+    Returns score_fn(feats) -> P(member)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    d = feats.shape[1]
+    params = {
+        "w1": jax.random.normal(k1, (d, hidden)) * (1.0 / np.sqrt(d)),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, 2)) * (1.0 / np.sqrt(hidden)),
+        "b2": jnp.zeros((2,)),
+    }
+    xf = jnp.asarray(feats)
+    yl = jnp.asarray(labels.astype(np.int32))
+
+    def loss(p):
+        h = jax.nn.relu(xf @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, yl[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(loss)(p)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+
+    def score(f: np.ndarray) -> np.ndarray:
+        h = jax.nn.relu(jnp.asarray(f) @ params["w1"] + params["b1"])
+        pr = jax.nn.softmax(h @ params["w2"] + params["b2"], axis=-1)
+        return np.asarray(pr[:, 1])
+
+    return score
+
+
+def roc_auc(scores: np.ndarray, labels: np.ndarray) -> float:
+    """AUC via the rank statistic (threshold-sweep ROC area)."""
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels == 1
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))
+
+
+def attack_auc(shadow_predict: Callable, target_predict: Callable,
+               data: ClassificationData, split: MIASplit, *,
+               seed: int = 0) -> float:
+    """Full pipeline: shadow features -> attack model -> target AUC."""
+    f_in = attack_features(shadow_predict, data.x[split.shadow_train])
+    f_out = attack_features(shadow_predict, data.x[split.shadow_out])
+    feats = np.concatenate([f_in, f_out])
+    labels = np.concatenate([np.ones(len(f_in)), np.zeros(len(f_out))])
+    score = train_attack_model(feats, labels, seed=seed)
+
+    t_in = attack_features(target_predict, data.x[split.target_train])
+    t_out = attack_features(target_predict, data.x[split.target_out])
+    t_feats = np.concatenate([t_in, t_out])
+    t_labels = np.concatenate([np.ones(len(t_in)), np.zeros(len(t_out))])
+    return roc_auc(score(t_feats), t_labels)

@@ -1,0 +1,3 @@
+from .rules import (ShardingStrategy, specs_for_tree, spec_for_leaf,  # noqa
+                    stack_shapes, shapes_and_axes, RULES_A, RULES_B,
+                    RULES_SERVE, RULES_SERVE_2D)

@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Model init returns an ``axes`` pytree mirroring params with tuples of
+logical names per dim. This module turns those into PartitionSpecs for a
+given *strategy* (DESIGN.md §4):
+
+  A "replicated-client" — paper-faithful: every client owns a full copy;
+     the stacked client axis shards over (pod, data); within a client,
+     heads/mlp/vocab/experts shard over "model".
+  B "sharded-client"    — beyond-paper for very large archs: few clients,
+     client axis over "pod" (multi-pod) or replicated; weight matrices
+     2-D sharded over ("data", "model") FSDP-style. Gossip is linear, so
+     shard-wise mixing is exact.
+
+Divisibility is always checked: a dim that doesn't divide by its mesh
+axes falls back to replicated (e.g. kv_heads=4 over model=16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+_IS_TUPLE = lambda x: isinstance(x, tuple)
+
+# logical name -> candidate mesh axes, per strategy
+RULES_A = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed2": ("model",),
+}
+
+RULES_B = {
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed2": ("model",),
+}
+
+# B2 (§Perf, mixtral train iteration 1 — REFUTED, see EXPERIMENTS.md):
+# batch data-parallel over "data"; weights 2-D sharded on parallel dims
+# (d_ff over (data, model)). The d_ff "data" factor collides with the
+# token/group "data" sharding inside the MoE einsums -> the partitioner
+# replicates the [g, e, cap, d] dispatch buffers (10s of TB).
+RULES_B2 = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("data", "model"),
+    "experts": ("model",),
+    "ssm_inner": ("data", "model"),
+    "ssm_heads": ("model",),
+    "embed2": ("model",),
+}
+
+# B3 (§Perf, mixtral iteration 3): batch over "data" + grouped MoE
+# dispatch; weights on "model" ONLY — no axis collision with activations.
+# Trades per-chip weight memory (parambytes/16) for collective volume.
+RULES_B3 = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "embed2": ("model",),
+}
+
+# serving (consensus model, no client axis): like A by default
+RULES_SERVE = RULES_A
+RULES_SERVE_2D = RULES_B            # huge archs: 2-D sharded weights
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingStrategy:
+    """How clients, batch, and weights map onto the mesh."""
+
+    name: str                        # "A" | "B" | "B2"
+    num_clients: int
+    client_axes: tuple[str, ...]     # mesh axes carrying the client dim
+    rules: dict
+    batch_axes: tuple[str, ...] = ()  # mesh axes for the per-client batch
+
+    @staticmethod
+    def for_arch(arch_name: str, mesh, *, strategy: str | None = None
+                 ) -> "ShardingStrategy":
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        multi_pod = "pod" in axis_sizes
+        big = arch_name.startswith("mixtral")
+        s = strategy or ("B" if big else "A")
+        if s == "A":
+            ca = ("pod", "data") if multi_pod else ("data",)
+            m = int(np.prod([axis_sizes[a] for a in ca]))
+            return ShardingStrategy("A", m, ca, RULES_A)
+        # strategy B/B2: few clients; client axis over pod when available
+        ca = ("pod",) if multi_pod else ()
+        m = axis_sizes["pod"] if multi_pod else 2
+        if s == "B2":
+            return ShardingStrategy("B2", m, ca, RULES_B2,
+                                    batch_axes=("data",))
+        if s == "B3":
+            return ShardingStrategy("B3", m, ca, RULES_B3,
+                                    batch_axes=("data",))
+        return ShardingStrategy("B", m, ca, RULES_B)
+
+
+def _dim_spec(name: str | None, size: int, rules: dict,
+              axis_sizes: dict[str, int], used: set[str]):
+    if name is None or name not in rules:
+        return None
+    axes = tuple(a for a in rules[name] if a in axis_sizes and a not in used)
+    if not axes:
+        return None
+    total = int(np.prod([axis_sizes[a] for a in axes]))
+    if size % total != 0:
+        # try single-axis fallback
+        for a in axes:
+            if size % axis_sizes[a] == 0:
+                used.add(a)
+                return a
+        return None
+    used.update(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for_leaf(axes_names: Sequence[str | None], shape: Sequence[int],
+                  rules: dict, mesh, *,
+                  leading_client: tuple[str, ...] | None = None) -> P:
+    """Build the PartitionSpec for one leaf.
+
+    leading_client: mesh axes for a prepended client dim (strategy A/B
+    stacked params); pass None for unstacked (serving) params.
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    entries = []
+    offset = 0
+    if leading_client is not None:
+        if leading_client:
+            used.update(leading_client)
+            entries.append(leading_client if len(leading_client) > 1
+                           else leading_client[0])
+        else:
+            entries.append(None)
+        offset = 1
+    for i, name in enumerate(axes_names):
+        size = shape[offset + i]
+        if name == "layers":           # scan axis: never sharded
+            entries.append(None)
+            continue
+        entries.append(_dim_spec(name, size, rules, axis_sizes, used))
+    return P(*entries)
+
+
+def specs_for_tree(axes_tree: Pytree, shapes_tree: Pytree, rules: dict,
+                   mesh, *, leading_client: tuple[str, ...] | None = None
+                   ) -> Pytree:
+    """axes_tree leaves: tuples of logical names. shapes_tree leaves:
+    ShapeDtypeStruct/arrays WITH the client dim already prepended when
+    leading_client is not None."""
+    def one(names, shaped):
+        return spec_for_leaf(names, shaped.shape, rules, mesh,
+                             leading_client=leading_client)
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_IS_TUPLE)
+
+
+def stack_shapes(shapes_tree: Pytree, m: int) -> Pytree:
+    """Prepend the client axis to every leaf's shape."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((m,) + tuple(s.shape), s.dtype),
+        shapes_tree)
+
+
+def shapes_and_axes(init_fn) -> tuple[Pytree, Pytree]:
+    """Evaluate an init that returns (params, axes) WITHOUT allocating.
+    axes (a python constant built at trace time) is captured by closure."""
+    box = {}
+
+    def wrapper(key):
+        p, a = init_fn(key)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(wrapper, jax.random.PRNGKey(0))
+    return shapes, box["axes"]

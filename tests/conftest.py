@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests must see the real
+single CPU device (the 512-device override belongs ONLY to dryrun.py and
+the subprocess-based multi-device tests)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_x64_off():
+    # defaults; explicit for clarity
+    assert jax.config.read("jax_enable_x64") is False
+    yield
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jit_caches_per_module():
+    """Long sessions compile hundreds of graphs (10 archs x variants);
+    free executables between modules to avoid LLVM OOM on the 1-core box."""
+    yield
+    jax.clear_caches()

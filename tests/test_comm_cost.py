@@ -1,0 +1,58 @@
+"""Communication accounting + Proposition 3."""
+import pytest
+
+from repro.core import (CommLedger, QuantConfig, bottleneck_bits,
+                        dfedavgm_round_bits, dsgd_round_bits,
+                        fedavg_round_bits, prop3_epsilon_floor,
+                        prop3_quantization_wins)
+from repro.core.topology import MixingSpec, ring_graph, star_graph
+
+
+def test_round_bits_formulas():
+    g = ring_graph(10)          # sum deg = 20
+    d = 1000
+    assert dfedavgm_round_bits(g, d) == 32 * d * 20
+    assert dfedavgm_round_bits(g, d, QuantConfig(bits=8)) == (32 + 8 * d) * 20
+    assert dsgd_round_bits(g, d) == 32 * d * 20
+    assert fedavg_round_bits(10, d) == 2 * 32 * d * 10
+
+
+def test_bottleneck_bits_server_vs_ring():
+    """The paper's scaling argument: server traffic grows with m, ring
+    per-client traffic is constant."""
+    d = 10_000
+    for m in (10, 100, 1000):
+        srv = bottleneck_bits("fedavg", d, m=m)
+        ring = bottleneck_bits("dfedavgm", d, graph=ring_graph(m))
+        assert srv == 2 * 32 * d * m
+        assert ring == 2 * 2 * 32 * d            # deg 2, both directions
+        if m > 4:
+            assert srv > ring
+
+
+def test_prop3_bit_condition():
+    """(32 + d b) * 9/4 < 32 d."""
+    assert prop3_quantization_wins(10**6, 8)
+    assert prop3_quantization_wins(10**6, 14)
+    assert not prop3_quantization_wins(10**6, 15)   # 9b/4 >= 32 => b >= 14.2
+    assert not prop3_quantization_wins(1, 8)         # tiny d: overhead wins
+
+
+def test_prop3_epsilon_floor_monotonic():
+    """Floor decreases with K and increases with s (paper's discussion)."""
+    kw = dict(theta=0.5, L=1.0, B=1.0, s=1e-3, d=10**6,
+              f0_minus_fmin=1.0, sigma_l=0.5, sigma_g=0.5)
+    e_k1 = prop3_epsilon_floor(K=1, **kw)
+    e_k16 = prop3_epsilon_floor(K=16, **kw)
+    assert e_k16 < e_k1
+    kw2 = dict(kw, s=1e-2)
+    assert prop3_epsilon_floor(K=4, **kw2) > prop3_epsilon_floor(K=4, **kw)
+
+
+def test_ledger():
+    led = CommLedger.for_dfedavgm(MixingSpec.ring(8), 1000,
+                                  QuantConfig(bits=8))
+    led.tick(10)
+    assert led.rounds == 10
+    assert led.total_bits == 10 * (32 + 8000) * 16
+    assert led.total_megabytes == pytest.approx(led.total_bits / 8e6)

@@ -1,0 +1,139 @@
+"""Serving invariant: token-by-token decode with caches reproduces the
+full (teacher-forced) forward pass, per architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import (decode_step, forward, init_decode_caches,
+                          init_model, prefill)
+from repro.models.frontends import stub_frontend_embeddings
+from repro.models import encode
+
+
+def _setup(arch, **over):
+    cfg = dataclasses.replace(reduced(get_config(arch)), remat=False, **over)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", [
+    "smollm-135m", "olmo-1b", "gemma-7b", "qwen3-32b",     # dense variants
+    "mamba2-780m",                                         # ssm
+    "zamba2-1.2b",                                         # hybrid+shared
+])
+def test_decode_equals_forward(arch):
+    cfg, params = _setup(arch)
+    L = 20
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, L), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, toks)
+    caches = init_decode_caches(cfg, 1, L)
+    outs = []
+    for t in range(L):
+        lg, caches = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                 caches)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_decode_equals_forward_moe_dropless():
+    cfg, params = _setup("mixtral-8x22b", moe_capacity_factor=8.0)
+    L = 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, L), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, toks)
+    caches = init_decode_caches(cfg, 1, L)
+    outs = []
+    for t in range(L):
+        lg, caches = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                 caches)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_decode_vlm_with_cross_states():
+    cfg, params = _setup("llama-3.2-vision-11b")
+    b, L = 2, 12
+    fe = stub_frontend_embeddings(cfg, b)
+    cross = fe @ params["vis_proj"]
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, L), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, toks, frontend_embeds=fe)
+    caches = init_decode_caches(cfg, b, L)
+    outs = []
+    for t in range(L):
+        lg, caches = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                 caches, cross_states=cross)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_decode_whisper_enc_dec():
+    cfg, params = _setup("whisper-tiny")
+    b, L = 2, 10
+    fe = stub_frontend_embeddings(cfg, b)
+    enc = encode(params, cfg, fe)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, L), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, toks, frontend_embeds=fe)
+    caches = init_decode_caches(cfg, b, L)
+    outs = []
+    for t in range(L):
+        lg, caches = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                 caches, cross_states=enc)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.stack(outs, 1)),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_sliding_window_ring_buffer():
+    """With window W, decode must only see the last W tokens; the ring
+    buffer (cache smaller than the sequence) must equal a full cache +
+    window mask."""
+    cfg, params = _setup("mixtral-8x22b", moe_capacity_factor=8.0)
+    W = cfg.sliding_window
+    assert W == 128
+    L = W + 40                          # longer than the window
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, L), 0,
+                              cfg.vocab_size)
+    # ring-buffer cache: allocated at window size
+    caches = init_decode_caches(cfg, 1, L)
+    kv_leaves = [l for l in jax.tree.leaves(caches) if l.ndim == 5]
+    assert all(l.shape[2] == W for l in kv_leaves), \
+        [l.shape for l in kv_leaves]
+    outs = []
+    for t in range(L):
+        lg, caches = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                 caches)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    full, _, _ = forward(params, cfg, toks)   # streaming attend w/ window
+    np.testing.assert_allclose(np.asarray(full[:, -20:]),
+                               np.asarray(dec[:, -20:]),
+                               atol=3e-4, rtol=3e-3)
+
+
+def test_prefill_matches_stepwise():
+    cfg, params = _setup("smollm-135m")
+    L = 18
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, L), 0,
+                              cfg.vocab_size)
+    caches = init_decode_caches(cfg, 2, L + 4)
+    last, caches = prefill(params, cfg, toks, caches)
+    caches2 = init_decode_caches(cfg, 2, L + 4)
+    for t in range(L):
+        lg, caches2 = decode_step(params, cfg, toks[:, t], jnp.int32(t),
+                                  caches2)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(lg),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,127 @@
+"""Algorithm-level behaviour of (quantized) DFedAvgM on analytic problems."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFedAvgMConfig, DSGDConfig, FedAvgConfig,
+                        MixingSpec, QuantConfig, average_params,
+                        consensus_distance, init_round_state,
+                        make_dsgd_step, make_fedavg_step, make_round_step)
+
+M, D = 8, 12
+
+
+def quad_problem(seed=1):
+    cs = jax.random.normal(jax.random.PRNGKey(seed), (M, D))
+
+    def loss_fn(p, batch, rng):
+        return 0.5 * jnp.sum((p["w"] - batch["c"]) ** 2)
+
+    batches = {"c": jnp.broadcast_to(cs[:, None], (M, 4, D))}
+    return cs, loss_fn, batches
+
+
+def run(step, rounds=400, key=2):
+    st = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(key))
+    _, loss_fn, batches = quad_problem()
+    step = jax.jit(step)
+    for _ in range(rounds):
+        st, mt = step(st, batches)
+    return st, mt
+
+
+def test_converges_to_global_minimizer():
+    """min f = mean of client optima for the quadratic ensemble."""
+    cs, loss_fn, _ = quad_problem()
+    step = make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.05, theta=0.5, local_steps=4), MixingSpec.ring(M))
+    st, mt = run(step)
+    avg = average_params(st.params)["w"]
+    assert float(jnp.linalg.norm(avg - cs.mean(0))) < 1e-3
+
+
+def test_momentum_accelerates_early():
+    """theta>0 reduces loss faster in early rounds (paper's question 2)."""
+    cs, loss_fn, batches = quad_problem()
+    outs = {}
+    for theta in (0.0, 0.8):
+        step = jax.jit(make_round_step(loss_fn, DFedAvgMConfig(
+            eta=0.01, theta=theta, local_steps=4), MixingSpec.ring(M)))
+        st = init_round_state({"w": jnp.zeros((M, D))},
+                              jax.random.PRNGKey(2))
+        for _ in range(15):
+            st, mt = step(st, batches)
+        outs[theta] = float(mt["loss"])
+    assert outs[0.8] < outs[0.0]
+
+
+def test_quantized_lemma5_stable_any_ring():
+    cs, loss_fn, _ = quad_problem()
+    step = make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.02, theta=0.5, local_steps=4,
+        quant=QuantConfig(bits=8, delta_mode="lemma5")),
+        MixingSpec.ring(M))          # non-PSD 1/3-ring
+    st, mt = run(step, rounds=500)
+    avg = average_params(st.params)["w"]
+    assert float(jnp.linalg.norm(avg - cs.mean(0))) < 0.05
+    assert float(mt["consensus_dist"]) < 2.0
+
+
+def test_quantized_eq7_needs_psd_w():
+    """Literal Algorithm 2 (eq. 7): stable with PSD W, diverges with the
+    1/3-ring whose lambda_min = -1/3 (our DESIGN.md §7 finding)."""
+    cs, loss_fn, _ = quad_problem()
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                         quant=QuantConfig(bits=8, delta_mode="eq7"))
+    st_psd, _ = run(make_round_step(loss_fn, cfg,
+                                    MixingSpec.ring(M, self_weight=0.5)),
+                    rounds=300)
+    avg = average_params(st_psd.params)["w"]
+    assert float(jnp.linalg.norm(avg - cs.mean(0))) < 0.05
+
+    st_bad, mt_bad = run(make_round_step(loss_fn, cfg, MixingSpec.ring(M)),
+                         rounds=100)
+    assert (not np.isfinite(float(mt_bad["loss"]))
+            or float(mt_bad["loss"]) > 1e3)
+
+
+def test_smaller_quant_step_smaller_error():
+    """Theorem 3: the additive error term scales with s."""
+    cs, loss_fn, _ = quad_problem()
+    errs = {}
+    for bits in (4, 8, 16):
+        step = make_round_step(loss_fn, DFedAvgMConfig(
+            eta=0.02, theta=0.0, local_steps=4,
+            quant=QuantConfig(bits=bits, stochastic=False,
+                              scale_mode="fixed", s=2.0 ** -(bits - 2),
+                              delta_mode="lemma5")),
+            MixingSpec.ring(M))
+        st, _ = run(step, rounds=400)
+        avg = average_params(st.params)["w"]
+        errs[bits] = float(jnp.linalg.norm(avg - cs.mean(0)))
+    assert errs[16] <= errs[8] <= errs[4] + 1e-6
+
+
+def test_consensus_distance_shrinks_with_better_graph():
+    """Lemma 4: client spread ~ eta^2/(1-lambda): complete < ring."""
+    cs, loss_fn, _ = quad_problem()
+    spreads = {}
+    for name, spec in (("ring", MixingSpec.ring(M)),
+                       ("complete", MixingSpec.complete(M))):
+        step = make_round_step(loss_fn, DFedAvgMConfig(
+            eta=0.05, theta=0.5, local_steps=4), spec)
+        st, mt = run(step, rounds=200)
+        spreads[name] = float(mt["consensus_dist"])
+    assert spreads["complete"] < spreads["ring"]
+
+
+def test_metrics_shapes():
+    _, loss_fn, batches = quad_problem()
+    step = jax.jit(make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.05, theta=0.5, local_steps=4), MixingSpec.ring(M)))
+    st = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(0))
+    st, mt = step(st, batches)
+    assert set(mt) == {"loss", "consensus_dist", "local_drift"}
+    assert st.round == 1
+    assert st.params["w"].shape == (M, D)

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp ref oracles: shape/dtype sweeps in interpret
+mode (per-kernel allclose, as required by the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import local_train
+from repro.kernels import (decode_apply_ring, encode_delta,
+                           make_fused_momentum_update, momentum_update_flat)
+from repro.kernels import ref
+from repro.kernels.dequant_mix import dequant_mix_pallas
+from repro.kernels.quantize_pack import quantize_pack_pallas
+
+BITS = (2, 4, 8, 16)
+SIZES = (1, 100, 512, 2048, 5000, 65536)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", SIZES)
+def test_quantize_pack_deterministic_matches_ref(bits, n):
+    x = jax.random.normal(jax.random.PRNGKey(n + bits), (n,)) * 0.3
+    words, s = encode_delta(x, bits, stochastic=False)
+    expected = ref.quantize_pack_ref(x, bits, s)
+    assert jnp.array_equal(words, expected)
+
+
+@pytest.mark.parametrize("bits", (4, 8))
+def test_quantize_pack_stochastic_matches_ref(bits):
+    n = 3000
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 0.2
+    per, w = ref.planar_pad_len(n, bits)
+    noise = jax.random.uniform(jax.random.PRNGKey(1), (per, w))
+    s = jnp.float32(0.01)
+    x2d = jnp.pad(x, (0, per * w - n)).reshape(per, w)
+    kernel = quantize_pack_pallas(x2d, s, noise, bits=bits, stochastic=True,
+                                  interpret=True)
+    expected = ref.quantize_pack_ref(jnp.pad(x, (0, per * w - n)), bits, s,
+                                     noise=noise.reshape(-1))
+    assert jnp.array_equal(kernel, expected)
+
+
+@pytest.mark.parametrize("bits", (4, 8, 16))
+@pytest.mark.parametrize("n", (64, 1000, 4096))
+@pytest.mark.parametrize("dtype", (jnp.float32, jnp.bfloat16))
+def test_dequant_mix_matches_ref(bits, n, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(1), (n,))).astype(dtype)
+    qs, ss = [], []
+    for i in range(3):
+        d = jax.random.normal(jax.random.PRNGKey(2 + i), (n,)) * 0.05
+        wds, s = encode_delta(d, bits, stochastic=False)
+        qs.append(wds)
+        ss.append(s)
+    scales = jnp.stack(ss)
+    out = decode_apply_ring(x, qs[0], qs[1], qs[2], scales, bits=bits,
+                            w_self=0.5, w_nb=0.25)
+    expected = ref.dequant_mix_ref(x, qs[0], qs[1], qs[2], scales, bits,
+                                   0.5, 0.25)
+    atol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), atol=atol)
+
+
+@given(st.integers(1, 40000), st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+       st.sampled_from([1e-3, 1e-2, 0.1]))
+@settings(max_examples=25, deadline=None)
+def test_momentum_matches_ref(n, theta, eta):
+    ky, kv, kg = jax.random.split(jax.random.PRNGKey(n % 101), 3)
+    y = jax.random.normal(ky, (n,))
+    v = jax.random.normal(kv, (n,))
+    g = jax.random.normal(kg, (n,))
+    yo, vo = momentum_update_flat(y, v, g, eta, theta)
+    yr, vr = ref.momentum_sgd_ref(y, v, g, eta, theta)
+    np.testing.assert_allclose(np.asarray(yo), np.asarray(yr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vo), np.asarray(vr), atol=1e-6)
+
+
+def test_fused_update_in_local_train_bitexact():
+    """Plugging the Pallas fused heavy-ball into local_train changes
+    nothing numerically (the integration point used by launch.train)."""
+    fused = make_fused_momentum_update(interpret=True)
+
+    def loss_fn(p, b, r):
+        return 0.5 * jnp.sum((p["w"] - b["c"]) ** 2) \
+            + jnp.sum(jnp.tanh(p["u"]) * b["c"][:3].sum())
+
+    p = {"w": jnp.ones((321,)), "u": jnp.full((3, 7), 0.1)}
+    b = {"c": jnp.linspace(-1, 1, 321 * 4).reshape(4, 321)}
+    y1, l1 = local_train(loss_fn, p, b, jax.random.PRNGKey(0),
+                         eta=0.02, theta=0.9)
+    y2, l2 = local_train(loss_fn, p, b, jax.random.PRNGKey(0),
+                         eta=0.02, theta=0.9, fused_update=fused)
+    for a, c in zip(jax.tree.leaves(y1), jax.tree.leaves(y2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-6)
+    assert float(l1) == float(l2)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_wire_volume_is_b_over_32(bits):
+    """The packed message is b/32 of the float payload (+1 scale word)."""
+    n = 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    words, s = encode_delta(x, bits, stochastic=False)
+    payload_words = n * bits / 32
+    assert words.size >= payload_words          # padding only adds
+    assert words.size <= payload_words + ref.LANE_BLOCK
+    assert words.dtype == jnp.uint32
+
+
+def test_quantize_pack_error_bound():
+    """Kernel roundtrip error <= s per coordinate (Assumption 4 basis)."""
+    for bits in BITS:
+        n = 2000
+        x = jax.random.normal(jax.random.PRNGKey(bits), (n,))
+        words, s = encode_delta(x, bits, stochastic=False)
+        back = ref.unpack_dequant_ref(words, bits, s, n)
+        assert float(jnp.abs(back - x).max()) <= float(s) * (1 + 1e-5)

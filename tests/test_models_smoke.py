@@ -1,0 +1,114 @@
+"""Per-architecture REDUCED smoke tests (deliverable (f)): instantiate a
+reduced variant of each assigned family, run one forward and one DFedAvgM
+train round on CPU, assert output shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, reduced
+from repro.core import (DFedAvgMConfig, MixingSpec, init_round_state,
+                        make_round_step)
+from repro.models import forward, init_model, loss_fn
+from repro.models.frontends import stub_frontend_embeddings
+
+ARCHS = list_archs()
+assert len(ARCHS) == 10, ARCHS
+
+
+def _batch(cfg, m=None, K=None, b=2, l=16, seed=1):
+    shape = (b, l) if m is None else (m, K, b, l)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), shape, 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.frontend is not None:
+        fe = stub_frontend_embeddings(cfg, b)
+        if m is not None:
+            fe = jnp.broadcast_to(fe[None, None], (m, K) + fe.shape)
+        batch["frontend"] = fe
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params, axes = init_model(jax.random.PRNGKey(0), cfg)
+    # axes mirrors params exactly
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple))
+    b, l = 2, 16
+    batch = _batch(cfg, b=b, l=l)
+    logits, _, aux = forward(params, cfg, batch["tokens"],
+                             frontend_embeds=batch.get("frontend"))
+    assert logits.shape == (b, l, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_round(arch):
+    cfg = dataclasses.replace(reduced(get_config(arch)), remat=False)
+    m, K = 4, 2
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    stacked = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), params)
+    step = jax.jit(make_round_step(
+        lambda p, b, r: loss_fn(p, cfg, b, r),
+        DFedAvgMConfig(eta=1e-3, theta=0.9, local_steps=K),
+        MixingSpec.ring(m)))
+    st = init_round_state(stacked, jax.random.PRNGKey(1))
+    st, metrics = step(st, _batch(cfg, m=m, K=K))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["consensus_dist"]))
+    for leaf in jax.tree.leaves(st.params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_respects_caps(arch):
+    """Brief: reduced = <=2 layers (blocks), d_model<=512, <=4 experts."""
+    r = reduced(get_config(arch))
+    assert r.n_layers <= 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+
+
+def test_exact_assigned_configs():
+    """The FULL configs carry the exact assigned numbers."""
+    expect = {
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 151936),
+        "mamba2-780m": (48, 1536, 0, 0, 50280),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 128256),
+        "olmo-1b": (16, 2048, 16, 16, 50304),
+        "whisper-tiny": (4, 384, 6, 6, 51865),
+        "gemma-7b": (28, 3072, 16, 16, 256000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 32000),
+        "smollm-135m": (30, 576, 9, 3, 49152),
+        "mixtral-8x22b": (56, 6144, 48, 8, 32768),
+        "qwen3-32b": (64, 5120, 64, 8, 151936),
+    }
+    for name, (nl, d, h, kv, v) in expect.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.vocab_size) == (nl, d, h, kv, v), name
+    assert get_config("qwen3-moe-30b-a3b").n_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").experts_per_token == 8
+    assert get_config("mixtral-8x22b").n_experts == 8
+    assert get_config("mixtral-8x22b").sliding_window == 4096
+    assert get_config("mamba2-780m").ssm_state == 128
+    assert get_config("zamba2-1.2b").ssm_state == 64
+    assert get_config("gemma-7b").head_dim == 256
+    assert get_config("qwen3-32b").qk_norm
+
+
+def test_param_counts_plausible():
+    """n_params() lands near the advertised sizes."""
+    approx = {
+        "smollm-135m": 0.135e9, "mamba2-780m": 0.78e9, "olmo-1b": 1.2e9,
+        "zamba2-1.2b": 2.2e9, "gemma-7b": 8.5e9, "qwen3-32b": 33e9,
+        "qwen3-moe-30b-a3b": 30.5e9, "mixtral-8x22b": 141e9,
+    }
+    for name, target in approx.items():
+        n = get_config(name).n_params()
+        assert 0.55 * target < n < 1.6 * target, (name, n, target)

@@ -1,0 +1,38 @@
+"""Torus gossip (beyond-paper extension): validity + spectral advantage."""
+import numpy as np
+
+from repro.core import MixingSpec, check_mixing_matrix, mixing_lambda
+
+
+def test_torus_spec_valid():
+    for shape in ((2, 4), (4, 4), (2, 16), (4, 8)):
+        s = MixingSpec.torus(*shape)
+        check_mixing_matrix(s.W, s.graph)
+        assert s.kind == "torus"
+        assert s.torus_shape == shape
+
+
+def test_torus_beats_ring_spectrally():
+    """Same O(1) per-node wire (<=4 neighbors), much faster mixing."""
+    for m, shape in ((16, (4, 4)), (32, (4, 8))):
+        lam_ring = MixingSpec.ring(m).lam
+        lam_torus = MixingSpec.torus(*shape).lam
+        assert lam_torus < lam_ring
+
+
+def test_torus_consensus_rounds():
+    """Rounds to reach consensus eps: torus needs fewer than ring."""
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(size=(32, 5))
+
+    def rounds_to(spec, eps=1e-3, cap=2000):
+        x = x0.copy()
+        for t in range(cap):
+            x = spec.W @ x
+            if np.abs(x - x.mean(0)).max() < eps:
+                return t
+        return cap
+
+    r_ring = rounds_to(MixingSpec.ring(32))
+    r_torus = rounds_to(MixingSpec.torus(4, 8))
+    assert r_torus < r_ring / 2, (r_ring, r_torus)
