@@ -1,0 +1,75 @@
+"""Time-varying gossip: static ring vs sampled / partial / random-walk
+schedules (beyond-paper; cf. random-walk DFedAvg arXiv:2508.21286 and
+FedPAQ arXiv:1909.13014 partial participation).
+
+For each schedule we train the paper's 2NN on the synthetic classification
+task and report wall time per round plus the headline trade-off: consensus
+distance reached vs (expected) bits moved per round. Run standalone:
+
+  PYTHONPATH=src python benchmarks/bench_timevarying.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import (MixingSpec, QuantConfig, TopologySchedule,
+                        schedule_round_bits)
+from repro.core.comm_cost import dfedavgm_round_bits
+from repro.core.topology import erdos_renyi_graph, ring_graph
+
+try:
+    from .common import train_dfedavgm_2nn
+except ImportError:  # standalone: python benchmarks/bench_timevarying.py
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import train_dfedavgm_2nn
+
+
+def schedules(m: int, rounds: int, seed: int = 0):
+    ring = MixingSpec.ring(m, self_weight=0.5)
+    er = erdos_renyi_graph(m, 0.4, seed=seed)
+    return [
+        ("static_ring", ring),
+        ("constant_sched", TopologySchedule.constant(ring)),
+        ("er_edge_sample", TopologySchedule.edge_sample(er, p_edge=0.5)),
+        ("ring_partial", TopologySchedule.partial(ring_graph(m),
+                                                  p_active=0.6)),
+        ("ring_random_walk", TopologySchedule.random_walk(
+            ring_graph(m), horizon=max(rounds, 64), seed=seed)),
+    ]
+
+
+def run(smoke: bool = False):
+    m = 8 if smoke else 16
+    rounds = 2 if smoke else 30
+    bits = 32
+    quant = QuantConfig(bits=bits) if bits < 32 else None
+    rows = []
+    for name, topo in schedules(m, rounds):
+        out = train_dfedavgm_2nn(m=m, K=2 if smoke else 4,
+                                 batch=8 if smoke else 32,
+                                 rounds=rounds, topology=topo)
+        d = out["d"]
+        if isinstance(topo, TopologySchedule):
+            bpr = schedule_round_bits(topo, d, quant)
+        else:
+            bpr = dfedavgm_round_bits(topo.graph, d, quant)
+        rows.append((f"timevarying_{name}", out["us_per_round"],
+                     f"loss={out['loss']:.4f}|"
+                     f"consensus_dist={out['consensus_dist']:.3e}|"
+                     f"bits_per_round={bpr:.0f}|acc={out['acc']:.3f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny m, 2 rounds — CI entrypoint check")
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

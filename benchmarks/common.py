@@ -44,12 +44,15 @@ def acc_2nn(params, data) -> float:
 def train_dfedavgm_2nn(*, m=16, K=4, batch=32, rounds=40, eta=0.05,
                        theta=0.9, bits=32, iid=True, data=None,
                        self_weight=0.5, seed=0, mixer="dense",
-                       return_state=False):
+                       topology=None, return_state=False):
+    """``topology`` overrides the default ring: a MixingSpec or a
+    TopologySchedule (time-varying gossip)."""
     data = data if data is not None else classification_dataset(n=8000,
                                                                 seed=0)
     fed = FederatedDataset.make(data, m, iid=iid, seed=seed)
     q = QuantConfig(bits=bits) if bits < 32 else None
-    spec = MixingSpec.ring(m, self_weight=self_weight)
+    spec = (topology if topology is not None
+            else MixingSpec.ring(m, self_weight=self_weight))
     step = jax.jit(make_round_step(loss_2nn, DFedAvgMConfig(
         eta=eta, theta=theta, local_steps=K, quant=q, mixer_impl=mixer),
         spec))
@@ -65,6 +68,7 @@ def train_dfedavgm_2nn(*, m=16, K=4, batch=32, rounds=40, eta=0.05,
     out = {
         "acc": acc_2nn(average_params(st.params), data),
         "loss": float(mt["loss"]),
+        "consensus_dist": float(mt["consensus_dist"]),
         "us_per_round": wall / rounds * 1e6,
         "spec": spec,
         "d": sum(x.size for x in jax.tree.leaves(p0)),

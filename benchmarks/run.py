@@ -1,8 +1,12 @@
 """Benchmark harness: one module per paper table/figure (+ roofline).
 Prints ``name,us_per_call,derived`` CSV.  PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` runs every bench that supports it at tiny scale (tiny m, 2
+rounds) — the CI entrypoint check that keeps benches from silently rotting.
 """
 import argparse
 import importlib
+import inspect
 import sys
 import traceback
 
@@ -14,6 +18,7 @@ MODULES = [
     "bench_mia",              # §6 MIA privacy probe
     "bench_comm_cost",        # Prop 3 table per assigned arch
     "bench_topology",         # beyond-paper: ring vs torus gossip
+    "bench_timevarying",      # beyond-paper: time-varying gossip schedules
     "bench_kernels",          # kernel microbench
     "bench_roofline",         # dry-run roofline table
 ]
@@ -23,6 +28,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench module suffixes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, 2 rounds: entrypoint sanity only")
     args = ap.parse_args()
     mods = MODULES if not args.only else [
         m for m in MODULES if any(s in m for s in args.only.split(","))]
@@ -31,7 +38,10 @@ def main() -> None:
     for mod in mods:
         try:
             m = importlib.import_module(f"benchmarks.{mod}")
-            for name, us, derived in m.run():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(m.run).parameters:
+                kwargs["smoke"] = True
+            for name, us, derived in m.run(**kwargs):
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failed.append(mod)

@@ -1,18 +1,21 @@
 """Core: the paper's contribution — (quantized) DFedAvgM as composable JAX."""
-from .topology import (Graph, MixingSpec, ring_graph, chain_graph,  # noqa
-                       torus_graph, complete_graph, star_graph,
+from .topology import (Graph, MixingSpec, TopologySchedule, ring_graph,  # noqa
+                       chain_graph, torus_graph, complete_graph, star_graph,
                        erdos_renyi_graph, metropolis_hastings,
                        max_degree_weights, lazy_uniform, mixing_lambda,
-                       spectral_gap, check_mixing_matrix)
+                       spectral_gap, check_mixing_matrix,
+                       metropolis_weights_from_adjacency)
 from .quantize import (QuantConfig, quantize, quantize_int, dequantize_int,  # noqa
                        pack_bits, unpack_bits, quantize_pytree,
                        dequantize_pytree, message_bits)
 from .local_sgd import local_train, heavy_ball_update  # noqa
-from .mixing import MixerConfig, make_mixer, mix_dense, consensus_distance  # noqa
+from .mixing import (MixerConfig, make_mixer, make_scheduled_mixer,  # noqa
+                     mix_dense, consensus_distance)
 from .dfedavgm import (DFedAvgMConfig, RoundState, init_round_state,  # noqa
                        make_round_step, average_params, round_comm_bits)
 from .baselines import (FedAvgConfig, make_fedavg_step, DSGDConfig,  # noqa
                         make_dsgd_step)
 from .comm_cost import (CommLedger, dfedavgm_round_bits, fedavg_round_bits,  # noqa
-                        dsgd_round_bits, prop3_quantization_wins,
-                        prop3_epsilon_floor, bottleneck_bits)
+                        dsgd_round_bits, schedule_round_bits,
+                        prop3_quantization_wins, prop3_epsilon_floor,
+                        bottleneck_bits)

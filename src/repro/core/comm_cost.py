@@ -18,16 +18,27 @@ import dataclasses
 import math
 
 from .quantize import QuantConfig, message_bits
-from .topology import Graph, MixingSpec
+from .topology import Graph, MixingSpec, TopologySchedule
 
 __all__ = ["dfedavgm_round_bits", "fedavg_round_bits", "dsgd_round_bits",
-           "prop3_quantization_wins", "prop3_epsilon_floor", "CommLedger"]
+           "schedule_round_bits", "prop3_quantization_wins",
+           "prop3_epsilon_floor", "CommLedger"]
 
 
 def dfedavgm_round_bits(graph: Graph, d: int,
                         quant: QuantConfig | None = None) -> int:
     qc = quant if quant is not None else QuantConfig(bits=32)
     return message_bits(d, qc) * graph.num_directed_edges()
+
+
+def schedule_round_bits(schedule: TopologySchedule, d: int,
+                        quant: QuantConfig | None = None,
+                        t: int | None = None) -> float:
+    """Expected bits per round under a time-varying topology: only *live*
+    directed edges pay ``message_bits`` (inactive clients send nothing).
+    Exact for deterministic kinds; an expectation for sampled ones."""
+    qc = quant if quant is not None else QuantConfig(bits=32)
+    return message_bits(d, qc) * schedule.expected_directed_edges(t)
 
 
 def dsgd_round_bits(graph: Graph, d: int) -> int:
@@ -68,14 +79,17 @@ def prop3_epsilon_floor(*, theta: float, L: float, B: float, s: float,
 
 @dataclasses.dataclass
 class CommLedger:
-    """Running bit counter attached to a training loop."""
+    """Running bit counter attached to a training loop. ``bits_per_round``
+    may be fractional for stochastic schedules (it is an expectation)."""
 
-    bits_per_round: int
+    bits_per_round: float
     rounds: int = 0
 
     @staticmethod
-    def for_dfedavgm(spec: MixingSpec, d: int,
+    def for_dfedavgm(spec: MixingSpec | TopologySchedule, d: int,
                      quant: QuantConfig | None) -> "CommLedger":
+        if isinstance(spec, TopologySchedule):
+            return CommLedger(schedule_round_bits(spec, d, quant))
         return CommLedger(dfedavgm_round_bits(spec.graph, d, quant))
 
     @staticmethod

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from .local_sgd import local_train
 from .mixing import MixerConfig, consensus_distance, make_mixer
 from .quantize import QuantConfig, message_bits
-from .topology import MixingSpec
+from .topology import MixingSpec, TopologySchedule
 
 Pytree = Any
 LossFn = Callable[..., jnp.ndarray]
@@ -71,7 +71,8 @@ def average_params(stacked: Pytree) -> Pytree:
                         .astype(z.dtype), stacked)
 
 
-def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig, spec: MixingSpec,
+def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
+                    spec: MixingSpec | TopologySchedule,
                     mesh=None, client_axes: Sequence[str] = (),
                     param_specs: Pytree | None = None,
                     fused_update=None,
@@ -81,7 +82,16 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig, spec: MixingSpec,
     ``batches``: pytree with leaves [m, K, ...] — K minibatches per client
     per round (the data pipeline shards these identically to params' client
     axis).
+
+    ``spec`` may be a static :class:`MixingSpec` or a time-varying
+    :class:`TopologySchedule`; with a schedule the round counter picks the
+    mixing event W_t, inactive clients' parameters are held exactly, and
+    metrics gain ``active_frac`` (the realized participation rate). A
+    constant schedule is bit-identical to the static dense mixer. Note the
+    local-SGD vmap still *computes* updates for inactive clients (their
+    result is gated out); skipping their compute is a scheduler follow-up.
     """
+    scheduled = isinstance(spec, TopologySchedule)
     mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
                        client_axes=client_axes, param_specs=param_specs)
     m = spec.m
@@ -95,9 +105,13 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig, spec: MixingSpec,
             fused_update=fused_update)
         z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
 
-        x_next = mixer(state.params, z, key_mix)
-
         metrics = {"loss": jnp.mean(losses)}
+        if scheduled:
+            x_next, active = mixer(state.params, z, key_mix, state.round)
+            if with_metrics:
+                metrics["active_frac"] = jnp.mean(active)
+        else:
+            x_next = mixer(state.params, z, key_mix)
         if with_metrics:
             metrics["consensus_dist"] = consensus_distance(x_next)
             metrics["local_drift"] = consensus_distance(z)
@@ -108,10 +122,19 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig, spec: MixingSpec,
     return round_step
 
 
-def round_comm_bits(spec: MixingSpec, n_params: int,
-                    quant: QuantConfig | None) -> int:
-    """Total bits moved on the graph in ONE round (paper §3.2 accounting):
-    every client sends its (possibly quantized) message to each neighbor."""
+def round_comm_bits(spec: MixingSpec | TopologySchedule, n_params: int,
+                    quant: QuantConfig | None,
+                    t: int | None = None) -> float:
+    """Bits moved on the graph in ONE round (paper §3.2 accounting): every
+    *participating* client sends its (possibly quantized) message across
+    each *live* directed edge.
+
+    Static spec: exact integer count, as before. TopologySchedule: the
+    expectation over the round's sampled edge set (exact for deterministic
+    kinds — constant / cycle / random_walk — pass ``t`` to resolve a
+    specific round of a cycle)."""
+    if isinstance(spec, TopologySchedule):
+        from .comm_cost import schedule_round_bits
+        return schedule_round_bits(spec, n_params, quant, t)
     qc = quant if quant is not None else QuantConfig(bits=32)
-    per_edge = message_bits(n_params, qc)
-    return per_edge * spec.graph.num_directed_edges()
+    return message_bits(n_params, qc) * spec.graph.num_directed_edges()

@@ -36,13 +36,19 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5 keeps shard_map under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .quantize import (QuantConfig, dequantize_int, pack_bits, quantize_int,
                        unpack_bits)
-from .topology import MixingSpec
+from .topology import MixingSpec, TopologySchedule
 
 Pytree = Any
 
-__all__ = ["MixerConfig", "make_mixer", "mix_dense", "consensus_distance"]
+__all__ = ["MixerConfig", "make_mixer", "make_scheduled_mixer", "mix_dense",
+           "consensus_distance"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +116,55 @@ def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
             mixed = jnp.tensordot(Wj, q, axes=([1], [0]))
             out.append((xl.astype(jnp.float32) + mixed).astype(xl.dtype))
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Scheduled mixer: time-varying W_t sampled per round (dense path)
+# ---------------------------------------------------------------------------
+
+def make_scheduled_mixer(schedule: TopologySchedule,
+                         cfg: MixerConfig) -> Callable:
+    """Build mixer(x, z, key, t) -> (x', active) for a time-varying topology.
+
+    Per round: ``(W_t, active) = schedule.round_event(key, t)`` is computed
+    *in-graph* (so the loop stays jittable), inactive clients' fresh ``z``
+    is gated back to their held ``x`` (they "send nothing" — their column of
+    W_t is zero for every active row, and their own row is ``e_i``), then
+    the usual dense gossip runs with the sampled matrix:
+
+      unquantized (eq. 5):  x' = W_t @ z_eff
+      quantized   (eq. 7):  x' = x + W_t @ Q(z_eff - x)   (or the lemma5
+                            recursion x' = W_t @ (x + Q(z_eff - x)))
+
+    Inactive clients quantize Q(0) = 0, so both quantized recursions also
+    hold them exactly. Sparse ppermute realizations of sampled topologies
+    are a roadmap item; this path lowers to one einsum per leaf.
+
+    Caveat (same as the static path, see QuantConfig.delta_mode): the
+    ``eq7`` recursion is only stable for PSD mixing matrices, and sampled
+    W_t (Metropolis on a random subgraph) are NOT guaranteed PSD — prefer
+    the default ``lemma5`` mode with stochastic schedules.
+    """
+    if cfg.impl not in ("auto", "dense"):
+        raise ValueError("time-varying schedules currently support only the "
+                         f"dense mixer, got impl={cfg.impl!r}")
+    quant = cfg.quant
+
+    def gate(active):
+        def per_leaf(zl, xl):
+            mask = active.reshape((-1,) + (1,) * (zl.ndim - 1))
+            return jnp.where(mask > 0, zl, xl)
+        return per_leaf
+
+    def mixer(x: Pytree, z: Pytree, key: jax.Array, t) -> tuple[Pytree, jnp.ndarray]:
+        W_t, active, key_q = schedule.round_event(key, t)
+        z_eff = (jax.tree.map(gate(active), z, x)
+                 if schedule.gates_participation else z)
+        if quant is None or not quant.enabled:
+            return mix_dense(W_t, z_eff), active
+        return _mix_dense_quantized(W_t, x, z_eff, quant, key_q), active
+
+    return mixer
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +261,7 @@ def make_ring_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
         def mixer(x: Pytree, z: Pytree, key=None) -> Pytree:
             del x, key
             specs = _ring_specs(z, ca, param_specs)
-            fn = jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+            fn = _shard_map(body, mesh=mesh, in_specs=(specs,),
                                out_specs=specs)
             return fn(z)
 
@@ -278,7 +333,7 @@ def make_ring_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
         key_specs = jax.tree.unflatten(
             treedef,
             [P(ca, *([None] * (k.ndim - 1))) for k in per_leaf_keys])
-        fn = jax.shard_map(q_body, mesh=mesh,
+        fn = _shard_map(q_body, mesh=mesh,
                            in_specs=(specs, specs, key_specs),
                            out_specs=specs)
         return fn(x, z, keys_tree)
@@ -358,7 +413,7 @@ def make_torus_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
     def mixer(x: Pytree, z: Pytree, key=None) -> Pytree:
         del x, key
         specs = _ring_specs(z, ca, param_specs)
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+        fn = _shard_map(body, mesh=mesh, in_specs=(specs,),
                            out_specs=specs)
         return fn(z)
 
@@ -369,15 +424,21 @@ def make_torus_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
 # Public factory
 # ---------------------------------------------------------------------------
 
-def make_mixer(spec: MixingSpec, cfg: MixerConfig, mesh=None,
-               client_axes: Sequence[str] = ("clients",),
+def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
+               mesh=None, client_axes: Sequence[str] = ("clients",),
                param_specs: Pytree | None = None) -> Callable:
     """Return mixer(x_stacked, z_stacked, key) -> x_next_stacked.
 
     Semantics (both impls, matching the paper):
       unquantized (Alg. 1, eq. 5):  x' = W @ z
       quantized   (Alg. 2, eq. 7):  x' = x + W @ Q(z - x)
+
+    A :class:`TopologySchedule` instead of a static spec returns the
+    time-varying mixer(x, z, key, t) -> (x', active) — see
+    :func:`make_scheduled_mixer`.
     """
+    if isinstance(spec, TopologySchedule):
+        return make_scheduled_mixer(spec, cfg)
     impl = cfg.resolved_impl(spec, mesh)
     quant = cfg.quant
 

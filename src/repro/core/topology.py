@@ -15,7 +15,7 @@ speed (Lemma 1: ||W^k - 11^T/m||_op <= lambda^k).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -34,6 +34,8 @@ __all__ = [
     "mixing_lambda",
     "check_mixing_matrix",
     "MixingSpec",
+    "TopologySchedule",
+    "metropolis_weights_from_adjacency",
 ]
 
 
@@ -307,3 +309,220 @@ class MixingSpec:
         check_mixing_matrix(W, g)
         return MixingSpec(graph=g, W=W, kind="torus",
                           torus_shape=(rows, cols))
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topologies: a round-indexed schedule of mixing events
+# ---------------------------------------------------------------------------
+
+def metropolis_weights_from_adjacency(adj):
+    """Metropolis–Hastings reweighting of a (possibly traced) 0/1 adjacency.
+
+    ``adj`` is an [m, m] float array — symmetric, zero diagonal — that may be
+    a jax tracer, so a per-round sampled subgraph can be reweighted *inside*
+    the jitted round step. For any such adjacency (connected or not) the
+    result is symmetric and doubly stochastic with eigenvalues in [-1, 1];
+    rows of isolated nodes degenerate to e_i (the client holds its value).
+    """
+    import jax.numpy as jnp
+
+    a = jnp.asarray(adj, dtype=jnp.float32)
+    deg = a.sum(axis=1)
+    pair = 1.0 + jnp.maximum(deg[:, None], deg[None, :])
+    W = a / pair
+    return W + jnp.diag(1.0 - W.sum(axis=1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A round-indexed sequence of mixing events ``(W_t, active_t)``.
+
+    Generalizes a static :class:`MixingSpec` to *time-varying* gossip: each
+    communication round ``t`` draws a doubly-stochastic ``W_t`` (and a mask
+    of participating clients) from a PRNG key, entirely in-graph so the
+    whole training loop stays jittable. Inactive clients hold their
+    parameters and send nothing: their ``W_t`` rows degenerate to ``e_i``
+    and the mixer gates their freshly-trained ``z`` back to ``x``.
+
+    Kinds:
+      * ``constant``     — ``W_t = W`` every round; reproduces the static
+                           mixer bit-for-bit (the trivial schedule).
+      * ``edge_sample``  — each base-graph edge is kept i.i.d. with prob
+                           ``p_edge`` per round; the surviving subgraph is
+                           Metropolis-reweighted (FedPAQ-style intermittent
+                           links).
+      * ``partial``      — each client participates i.i.d. with prob
+                           ``p_active``; only edges between two active
+                           clients carry messages.
+      * ``random_walk``  — a single gossip token walks the base graph; round
+                           ``t`` pairwise-averages the token's current and
+                           next node (random-walk DFedAvg, arXiv:2508.21286
+                           flavor). The walk path is precomputed host-side
+                           from ``seed`` (data-independent), so per-round
+                           lookup is O(1) in-graph.
+      * ``cycle``        — deterministic cycle over a list of mixing
+                           matrices (e.g. alternating ring/torus).
+
+    All kinds guarantee every sampled ``W_t`` is symmetric, doubly
+    stochastic, and zero off the active edge set (tests enforce this).
+    """
+
+    kind: str                      # constant|edge_sample|partial|random_walk|cycle
+    m: int
+    name: str = "schedule"
+    base_W: np.ndarray | None = None      # constant
+    adj: np.ndarray | None = None         # edge_sample / partial / random_walk
+    p_edge: float = 1.0                   # edge_sample
+    p_active: float = 1.0                 # partial
+    walk: np.ndarray | None = None        # random_walk: [horizon+1] int32 path
+    Ws: np.ndarray | None = None          # cycle: [n, m, m] stacked matrices
+
+    _KINDS = ("constant", "edge_sample", "partial", "random_walk", "cycle")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown schedule kind {self.kind!r}")
+
+    # -- properties the mixer / ledger dispatch on ------------------------
+
+    @property
+    def is_stochastic(self) -> bool:
+        """Whether sample_w consumes PRNG randomness each round."""
+        return self.kind in ("edge_sample", "partial")
+
+    @property
+    def gates_participation(self) -> bool:
+        """Whether some clients may sit a round out (mixer must gate z)."""
+        return self.kind in ("partial", "random_walk")
+
+    def expected_directed_edges(self, t: int | None = None) -> float:
+        """E[#directed edges carrying a message in round t] — the quantity
+        per-round communication cost is proportional to. For deterministic
+        kinds with ``t`` given, the count is exact for that round."""
+        if self.kind == "constant":
+            return float(np.count_nonzero(
+                self.base_W - np.diag(np.diag(self.base_W))))
+        if self.kind == "cycle":
+            counts = [float(np.count_nonzero(W - np.diag(np.diag(W))))
+                      for W in self.Ws]
+            if t is not None:
+                return counts[int(t) % len(counts)]
+            return float(np.mean(counts))
+        base = float(self.adj.sum())
+        if self.kind == "edge_sample":
+            return self.p_edge * base
+        if self.kind == "partial":
+            # an edge is live iff both endpoints drew active
+            return self.p_active ** 2 * base
+        return 2.0  # random_walk: one undirected edge per round
+
+    # -- in-graph sampling ------------------------------------------------
+
+    def sample_w(self, key, t):
+        """(key, round) -> (W_t [m,m] f32, active [m] f32). Jit-safe."""
+        import jax
+        import jax.numpy as jnp
+
+        m = self.m
+        ones = jnp.ones((m,), jnp.float32)
+        if self.kind == "constant":
+            return jnp.asarray(self.base_W, jnp.float32), ones
+        if self.kind == "cycle":
+            Ws = jnp.asarray(self.Ws, jnp.float32)
+            t = jnp.asarray(t, jnp.int32)
+            return Ws[t % Ws.shape[0]], ones
+        if self.kind == "edge_sample":
+            adj = jnp.asarray(self.adj, jnp.float32)
+            u = jnp.triu(jax.random.uniform(key, (m, m)), k=1)
+            u = u + u.T   # one uniform per undirected edge, symmetric
+            keep = (u < self.p_edge).astype(jnp.float32) * adj
+            return metropolis_weights_from_adjacency(keep), ones
+        if self.kind == "partial":
+            adj = jnp.asarray(self.adj, jnp.float32)
+            active = (jax.random.uniform(key, (m,))
+                      < self.p_active).astype(jnp.float32)
+            live = adj * active[:, None] * active[None, :]
+            return metropolis_weights_from_adjacency(live), active
+        # random_walk: token edge (pos[t], pos[t+1]) pairwise-averages
+        t = jnp.asarray(t, jnp.int32)
+        pos = jnp.asarray(self.walk, jnp.int32)
+        horizon = pos.shape[0] - 1
+        i = pos[t % horizon]
+        j = pos[t % horizon + 1]
+        W = (jnp.eye(self.m, dtype=jnp.float32)
+             .at[i, i].add(-0.5).at[j, j].add(-0.5)
+             .at[i, j].add(0.5).at[j, i].add(0.5))
+        active = jnp.zeros((m,), jnp.float32).at[i].set(1.0).at[j].set(1.0)
+        return W, active
+
+    def round_event(self, key_mix, t):
+        """Derive round t's (W_t, active, key_quant) from the round-step's
+        mixing key — the single source of truth for how the key is split,
+        shared by the mixer, tests, and benchmarks."""
+        import jax
+
+        if self.is_stochastic:
+            key_topo, key_q = jax.random.split(key_mix)
+        else:
+            key_topo = key_q = key_mix
+        W, active = self.sample_w(key_topo, t)
+        return W, active, key_q
+
+    # -- constructors -----------------------------------------------------
+
+    @staticmethod
+    def constant(spec: MixingSpec) -> "TopologySchedule":
+        """The trivial schedule: static W every round (bit-identical to the
+        dense static mixer on the same key)."""
+        return TopologySchedule(kind="constant", m=spec.m,
+                                name=f"constant[{spec.graph.name}]",
+                                base_W=np.asarray(spec.W, np.float64))
+
+    @staticmethod
+    def edge_sample(graph: Graph, p_edge: float) -> "TopologySchedule":
+        if not 0.0 < p_edge <= 1.0:
+            raise ValueError("need 0 < p_edge <= 1")
+        return TopologySchedule(kind="edge_sample", m=graph.m,
+                                name=f"edge_sample[{graph.name},p={p_edge}]",
+                                adj=graph.adj.astype(np.float64),
+                                p_edge=float(p_edge))
+
+    @staticmethod
+    def partial(graph: Graph, p_active: float) -> "TopologySchedule":
+        if not 0.0 < p_active <= 1.0:
+            raise ValueError("need 0 < p_active <= 1")
+        return TopologySchedule(kind="partial", m=graph.m,
+                                name=f"partial[{graph.name},p={p_active}]",
+                                adj=graph.adj.astype(np.float64),
+                                p_active=float(p_active))
+
+    @staticmethod
+    def random_walk(graph: Graph, horizon: int = 4096,
+                    seed: int = 0, start: int = 0) -> "TopologySchedule":
+        """Precompute a ``horizon``-step walk on ``graph``; round t gossips
+        across walk edge (pos[t], pos[t+1]). Wraps modulo horizon after
+        ``horizon`` rounds."""
+        if not graph.is_connected():
+            raise ValueError("random walk needs a connected base graph")
+        rng = np.random.default_rng(seed)
+        pos = np.empty(horizon + 1, dtype=np.int32)
+        pos[0] = start
+        for k in range(horizon):
+            pos[k + 1] = rng.choice(graph.neighbors(int(pos[k])))
+        return TopologySchedule(kind="random_walk", m=graph.m,
+                                name=f"random_walk[{graph.name}]",
+                                adj=graph.adj.astype(np.float64), walk=pos)
+
+    @staticmethod
+    def cycle(specs: Sequence[MixingSpec]) -> "TopologySchedule":
+        """Deterministic cycle W_t = specs[t mod n].W (e.g. ring/torus
+        alternation). All specs must share m."""
+        if not specs:
+            raise ValueError("cycle needs at least one MixingSpec")
+        m = specs[0].m
+        if any(s.m != m for s in specs):
+            raise ValueError("all specs in a cycle must have the same m")
+        Ws = np.stack([np.asarray(s.W, np.float64) for s in specs])
+        names = "/".join(s.graph.name for s in specs)
+        return TopologySchedule(kind="cycle", m=m, name=f"cycle[{names}]",
+                                Ws=Ws)

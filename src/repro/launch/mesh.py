@@ -9,21 +9,30 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_types_kw(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto,) * n`` where supported, else {}.
+
+    jax.sharding.AxisType only exists on newer jax; older releases (e.g.
+    0.4.x) treat every mesh axis as Auto already, so omitting the kwarg is
+    equivalent there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips (16, 16) ("data", "model").
     Multi-pod: 2 pods = 512 chips (2, 16, 16) ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types_kw(len(axes)))
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small host-device mesh for CPU multi-device tests."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types_kw(len(axes)))
 
 
 # v5e hardware constants for the roofline analysis (per chip / per link)

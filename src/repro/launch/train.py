@@ -19,10 +19,41 @@ import numpy as np
 
 from ..configs import get_config, reduced as make_reduced
 from ..core import (CommLedger, DFedAvgMConfig, MixingSpec, QuantConfig,
-                    average_params, init_round_state, make_round_step,
-                    round_comm_bits)
+                    TopologySchedule, average_params, init_round_state,
+                    make_round_step, round_comm_bits)
+from ..core.topology import erdos_renyi_graph, ring_graph, torus_graph
 from ..data.synthetic import lm_round_batches
 from ..models import model as M
+
+
+def build_topology(args, m: int):
+    """CLI -> static MixingSpec or time-varying TopologySchedule."""
+    ring = MixingSpec.ring(m, self_weight=args.self_weight)
+    if args.schedule == "static":
+        return ring
+    if args.schedule == "constant":
+        return TopologySchedule.constant(ring)
+    if args.schedule == "edge-sample":
+        base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
+                if args.base_graph == "er" else ring_graph(m))
+        return TopologySchedule.edge_sample(base, args.edge_p)
+    if args.schedule == "partial":
+        base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
+                if args.base_graph == "er" else ring_graph(m))
+        return TopologySchedule.partial(base, args.p_active)
+    if args.schedule == "random-walk":
+        base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
+                if args.base_graph == "er" else ring_graph(m))
+        return TopologySchedule.random_walk(base, horizon=max(args.rounds, 64),
+                                            seed=args.seed)
+    if args.schedule == "cycle":
+        rows = next((r for r in range(int(m ** 0.5), 1, -1) if m % r == 0),
+                    None)
+        if rows is None:
+            raise SystemExit(f"--schedule cycle needs composite m, got {m}")
+        return TopologySchedule.cycle(
+            [ring, MixingSpec.torus(rows, m // rows)])
+    raise SystemExit(f"unknown --schedule {args.schedule!r}")
 
 
 def main(argv=None):
@@ -39,6 +70,18 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=32)
     ap.add_argument("--self-weight", type=float, default=0.5,
                     help="ring self weight (0.5 => PSD W, safe for Alg. 2)")
+    ap.add_argument("--schedule", default="static",
+                    choices=["static", "constant", "edge-sample", "partial",
+                             "random-walk", "cycle"],
+                    help="time-varying topology schedule (static = old path)")
+    ap.add_argument("--base-graph", default="ring", choices=["ring", "er"],
+                    help="base graph for sampled schedules")
+    ap.add_argument("--edge-p", type=float, default=0.7,
+                    help="per-round edge keep probability (edge-sample)")
+    ap.add_argument("--p-active", type=float, default=0.7,
+                    help="per-round client participation prob (partial)")
+    ap.add_argument("--er-p", type=float, default=0.5,
+                    help="ER base-graph edge density (--base-graph er)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="save RoundState every --ckpt-every rounds")
@@ -55,7 +98,10 @@ def main(argv=None):
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
                           local_steps=args.local_steps, quant=quant,
                           mixer_impl="dense")
-    spec = MixingSpec.ring(m, self_weight=args.self_weight)
+    spec = build_topology(args, m)
+    if isinstance(spec, TopologySchedule):
+        print(f"topology schedule: {spec.name} "
+              f"(E[directed edges/round] = {spec.expected_directed_edges():.1f})")
 
     key = jax.random.PRNGKey(args.seed)
     k_init, k_state, k_data = jax.random.split(key, 3)

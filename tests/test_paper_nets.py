@@ -70,8 +70,8 @@ def test_charlstm_forward_and_learn():
         return jax.tree.map(lambda w, gw: w - 0.5 * gw, p, g), l
 
     _, l0 = step(p)
-    for _ in range(40):
-        p, l = step(p)
+    for _ in range(80):   # 40 lands right at the 0.5 threshold on some
+        p, l = step(p)    # jax versions; 80 passes with a wide margin
     assert float(l) < 0.5 * float(l0)   # the periodic stream is learnable
 
 

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev dep: bare env skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quantize import (QuantConfig, dequantize_int, message_bits,

@@ -1,0 +1,243 @@
+"""TopologySchedule invariants: every sampled W_t is a valid per-round
+mixing event, inactive clients are held exactly, and the trivial constant
+schedule reproduces the static mixer bit-for-bit.
+
+Deliberately hypothesis-free: this module must run (not skip) in a bare
+environment so the time-varying path always has coverage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DFedAvgMConfig, MixingSpec, QuantConfig,
+                        TopologySchedule, init_round_state, make_round_step,
+                        round_comm_bits, schedule_round_bits)
+from repro.core.topology import (check_mixing_matrix, erdos_renyi_graph,
+                                 metropolis_weights_from_adjacency,
+                                 ring_graph, torus_graph)
+
+M, D = 8, 12
+
+
+def all_schedules(m=M):
+    ring = MixingSpec.ring(m, self_weight=0.5)
+    er = erdos_renyi_graph(m, 0.5, seed=3)
+    return [
+        TopologySchedule.constant(ring),
+        TopologySchedule.edge_sample(er, p_edge=0.6),
+        TopologySchedule.partial(ring_graph(m), p_active=0.5),
+        TopologySchedule.random_walk(ring_graph(m), horizon=32, seed=1),
+        TopologySchedule.cycle([ring, MixingSpec.torus(2, m // 2)]),
+    ]
+
+
+def quad_problem(seed=1):
+    cs = jax.random.normal(jax.random.PRNGKey(seed), (M, D))
+    loss_fn = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+    batches = {"c": jnp.broadcast_to(cs[:, None], (M, 4, D))}
+    return cs, loss_fn, batches
+
+
+# ---------------------------------------------------------------------------
+# Sampled-matrix invariants (satellite requirement)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched", all_schedules(), ids=lambda s: s.name)
+def test_sampled_w_is_valid_mixing_event(sched):
+    """Every W_t: symmetric, doubly stochastic, eigenvalues in [-1, 1]."""
+    sample = jax.jit(sched.sample_w)
+    for t in range(6):
+        W, active = sample(jax.random.PRNGKey(100 + t), t)
+        W, active = np.asarray(W, np.float64), np.asarray(active)
+        assert W.shape == (sched.m, sched.m)
+        assert np.allclose(W, W.T, atol=1e-6)
+        assert np.allclose(W.sum(axis=1), 1.0, atol=1e-6)
+        assert np.allclose(W.sum(axis=0), 1.0, atol=1e-6)
+        ev = np.linalg.eigvalsh(W)
+        assert ev.min() >= -1.0 - 1e-6 and ev.max() <= 1.0 + 1e-6
+        assert active.shape == (sched.m,)
+        assert set(np.unique(active)).issubset({0.0, 1.0})
+
+
+def test_edge_sample_zero_off_active_edge_set():
+    """w_ij != 0 (i != j) only where the base graph has the edge AND the
+    round kept it; inactive-client rows in the partial kind are e_i."""
+    g = erdos_renyi_graph(M, 0.5, seed=3)
+    sched = TopologySchedule.edge_sample(g, p_edge=0.5)
+    for t in range(5):
+        key = jax.random.PRNGKey(t)
+        W, _ = sched.sample_w(key, t)
+        W = np.asarray(W)
+        off = ~np.eye(M, dtype=bool)
+        assert not ((W != 0) & off & ~g.adj).any()    # never off base graph
+    # p_edge=1 keeps everything: must equal static Metropolis exactly
+    full = TopologySchedule.edge_sample(g, p_edge=1.0)
+    W, _ = full.sample_w(jax.random.PRNGKey(0), 0)
+    expect = np.asarray(
+        metropolis_weights_from_adjacency(g.adj.astype(np.float32)))
+    np.testing.assert_array_equal(np.asarray(W), expect)
+    check_mixing_matrix(np.asarray(W, np.float64), g, atol=1e-6)
+
+
+def test_partial_inactive_rows_are_identity():
+    sched = TopologySchedule.partial(ring_graph(M), p_active=0.5)
+    found_inactive = False
+    for t in range(6):
+        W, active = sched.round_event(jax.random.PRNGKey(t), t)[:2]
+        W, active = np.asarray(W), np.asarray(active)
+        for i in np.nonzero(active == 0)[0]:
+            found_inactive = True
+            e_i = np.zeros(M)
+            e_i[i] = 1.0
+            np.testing.assert_array_equal(W[i], e_i)   # row e_i: holds
+            np.testing.assert_array_equal(W[:, i], e_i)  # sends nothing
+    assert found_inactive
+
+
+def test_random_walk_token_edge_on_graph():
+    g = ring_graph(M)
+    sched = TopologySchedule.random_walk(g, horizon=16, seed=2)
+    for t in range(20):   # past the horizon: wraps, still on-graph
+        W, active = sched.sample_w(jax.random.PRNGKey(0), t)
+        W, active = np.asarray(W), np.asarray(active)
+        assert active.sum() == 2.0          # exactly the token edge
+        i, j = np.nonzero(active)[0]
+        assert g.adj[i, j]
+        # pairwise average on (i, j), identity elsewhere
+        expect = np.eye(M)
+        expect[i, i] = expect[j, j] = expect[i, j] = expect[j, i] = 0.5
+        np.testing.assert_allclose(W, expect, atol=1e-6)
+
+
+def test_cycle_alternates_deterministically():
+    ring = MixingSpec.ring(M, self_weight=0.5)
+    torus = MixingSpec.torus(2, M // 2)
+    sched = TopologySchedule.cycle([ring, torus])
+    for t in range(4):
+        W, _ = sched.sample_w(jax.random.PRNGKey(t), t)
+        expect = (ring if t % 2 == 0 else torus).W
+        np.testing.assert_allclose(np.asarray(W), expect, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Round-step behaviour (satellite requirement)
+# ---------------------------------------------------------------------------
+
+def _run(topology, rounds=3, quant=None, key=2):
+    _, loss_fn, batches = quad_problem()
+    step = jax.jit(make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.05, theta=0.5, local_steps=4, quant=quant,
+        mixer_impl="dense"), topology))
+    st = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(key))
+    for _ in range(rounds):
+        st, mt = step(st, batches)
+    return st, mt
+
+
+@pytest.mark.parametrize("quant", [None, QuantConfig(bits=8)],
+                         ids=["fp32", "q8"])
+def test_constant_schedule_bit_identical_to_static(quant):
+    """The trivial schedule must reproduce the old static dense mixer
+    EXACTLY (same key, same outputs, bit for bit)."""
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    st_static, mt_static = _run(spec, quant=quant)
+    st_sched, mt_sched = _run(TopologySchedule.constant(spec), quant=quant)
+    np.testing.assert_array_equal(np.asarray(st_static.params["w"]),
+                                  np.asarray(st_sched.params["w"]))
+    assert float(mt_static["loss"]) == float(mt_sched["loss"])
+    assert float(mt_sched["active_frac"]) == 1.0
+
+
+@pytest.mark.parametrize("quant", [None,
+                                   QuantConfig(bits=8, delta_mode="lemma5"),
+                                   QuantConfig(bits=8, delta_mode="eq7")],
+                         ids=["fp32", "q8-lemma5", "q8-eq7"])
+def test_inactive_clients_hold_params_exactly(quant):
+    sched = TopologySchedule.partial(ring_graph(M), p_active=0.5)
+    _, loss_fn, batches = quad_problem()
+    step = jax.jit(make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.05, theta=0.5, local_steps=4, quant=quant), sched))
+    st = init_round_state(
+        {"w": jnp.arange(M * D, dtype=jnp.float32).reshape(M, D)},
+        jax.random.PRNGKey(7))
+    x0 = np.asarray(st.params["w"])
+    # replicate the round's key derivation to learn who was inactive
+    _, key_mix, _ = jax.random.split(st.rng, 3)
+    _, active, _ = sched.round_event(key_mix, 0)
+    inactive = np.asarray(active) == 0
+    assert inactive.any() and (~inactive).any(), "seed picks a mixed round"
+    st1, mt = step(st, batches)
+    x1 = np.asarray(st1.params["w"])
+    np.testing.assert_array_equal(x1[inactive], x0[inactive])
+    assert not np.array_equal(x1[~inactive], x0[~inactive])
+    assert float(mt["active_frac"]) == float(np.mean(~inactive))
+
+
+def test_random_walk_converges_toward_consensus():
+    """Token gossip still mixes: consensus distance falls over rounds."""
+    sched = TopologySchedule.random_walk(ring_graph(M), horizon=256, seed=0)
+    _, loss_fn, batches = quad_problem()
+    step = jax.jit(make_round_step(loss_fn, DFedAvgMConfig(
+        eta=0.02, theta=0.0, local_steps=2), sched))
+    st = init_round_state(
+        {"w": jax.random.normal(jax.random.PRNGKey(3), (M, D)) * 10.0},
+        jax.random.PRNGKey(4))
+    first = None
+    for t in range(40):
+        st, mt = step(st, batches)
+        if first is None:
+            first = float(mt["consensus_dist"])
+    assert float(mt["consensus_dist"]) < first
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting
+# ---------------------------------------------------------------------------
+
+def test_round_comm_bits_expectation_aware():
+    d = 1000
+    ring = MixingSpec.ring(M, self_weight=0.5)
+    static_bits = round_comm_bits(ring, d, None)
+    assert round_comm_bits(TopologySchedule.constant(ring), d, None) \
+        == static_bits
+    g = ring_graph(M)
+    assert round_comm_bits(TopologySchedule.edge_sample(g, 0.5), d, None) \
+        == pytest.approx(0.5 * static_bits)
+    assert round_comm_bits(TopologySchedule.partial(g, 0.5), d, None) \
+        == pytest.approx(0.25 * static_bits)
+    rw = TopologySchedule.random_walk(g, horizon=16)
+    assert round_comm_bits(rw, d, None) == 2 * 32 * d
+    # quantized: only live directed edges pay message_bits
+    q = QuantConfig(bits=4)
+    assert schedule_round_bits(TopologySchedule.edge_sample(g, 0.5), d, q) \
+        == pytest.approx(0.5 * 2 * M * (32 + 4 * d))
+
+
+def test_cycle_round_comm_bits_per_round():
+    ring = MixingSpec.ring(M, self_weight=0.5)          # 2M directed edges
+    torus = MixingSpec.torus(2, M // 2)                 # denser
+    sched = TopologySchedule.cycle([ring, torus])
+    d = 10
+    b_ring = round_comm_bits(sched, d, None, t=0)
+    b_torus = round_comm_bits(sched, d, None, t=1)
+    assert b_ring == round_comm_bits(ring, d, None)
+    assert b_torus == round_comm_bits(torus, d, None)
+    assert round_comm_bits(sched, d, None) \
+        == pytest.approx((b_ring + b_torus) / 2)
+
+
+def test_schedule_rejects_bad_args():
+    g = ring_graph(M)
+    with pytest.raises(ValueError):
+        TopologySchedule.edge_sample(g, 0.0)
+    with pytest.raises(ValueError):
+        TopologySchedule.partial(g, 1.5)
+    with pytest.raises(ValueError):
+        TopologySchedule.cycle([])
+    with pytest.raises(ValueError):
+        TopologySchedule(kind="nope", m=M)
+    from repro.core import MixerConfig, make_mixer
+    with pytest.raises(ValueError):
+        make_mixer(TopologySchedule.constant(MixingSpec.ring(M)),
+                   MixerConfig(impl="ring"))
