@@ -7,15 +7,28 @@ task and report wall time per round plus the headline trade-off: consensus
 distance reached vs (expected) bits moved per round. Run standalone:
 
   PYTHONPATH=src python benchmarks/bench_timevarying.py --smoke
+
+The dense-vs-sparse backend comparison (HLO collective bytes + wall clock
+on an 8-device host mesh, written to BENCH_gossip.json at the repo root)
+runs in a subprocess so this process keeps its single CPU device.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
 
 from repro.core import (MixingSpec, QuantConfig, TopologySchedule,
                         schedule_round_bits)
 from repro.core.comm_cost import dfedavgm_round_bits
 from repro.core.topology import erdos_renyi_graph, ring_graph
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GOSSIP_JSON = REPO / "BENCH_gossip.json"
 
 try:
     from .common import train_dfedavgm_2nn
@@ -40,6 +53,100 @@ def schedules(m: int, rounds: int, seed: int = 0):
     ]
 
 
+# ---------------------------------------------------------------------------
+# Dense vs sparse backend: HLO collective bytes + wall clock per round
+# ---------------------------------------------------------------------------
+
+_COMPARE_SRC = """
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core import (MixerConfig, QuantConfig, TopologySchedule,
+                            make_mixer, plan_round_bits,
+                            schedule_round_bits)
+    from repro.core.topology import ring_graph
+    from repro.launch.hlo_stats import collect_collectives
+
+    m, d, iters = {m}, {d}, {iters}
+    mesh = Mesh(np.array(jax.devices()[:m]), ("clients",))
+    sched = TopologySchedule.edge_sample(ring_graph(m), p_edge=0.5)
+    plan = sched.gossip_plan()
+    sh = NamedSharding(mesh, P("clients", None))
+    x = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (m, d)), sh)
+    z = jax.device_put(jax.random.normal(jax.random.PRNGKey(1), (m, d)), sh)
+    out = {{"m": m, "d": d, "schedule": sched.name,
+            "plan_steps": plan.n_steps,
+            "plan_wire_edges": plan.num_directed_wire_edges}}
+    for bits in (32, 8):
+        q = (QuantConfig(bits=bits, stochastic=False, delta_mode="eq7")
+             if bits < 32 else None)
+        for impl in ("dense", "sparse"):
+            mx = make_mixer(sched, MixerConfig(impl=impl, quant=q),
+                            mesh=mesh if impl == "sparse" else None,
+                            client_axes=("clients",))
+            fn = jax.jit(lambda a, b, k, t: mx({{"w": a}}, {{"w": b}},
+                                               k, t)[0]["w"])
+            key = jax.random.PRNGKey(2)
+            txt = fn.lower(x, z, key, 0).compile().as_text()
+            stats = collect_collectives(txt).as_dict()
+            jax.block_until_ready(fn(x, z, key, 0))   # warmup/compile
+            t0 = time.perf_counter()
+            for t in range(iters):
+                r = fn(x, z, key, t)
+            jax.block_until_ready(r)
+            us = (time.perf_counter() - t0) / iters * 1e6
+            out[f"{{impl}}_b{{bits}}"] = {{
+                "wire_bytes_per_device": stats["wire_bytes"],
+                "collectives": stats["counts"],
+                "us_per_round": us,
+                "billed_bits_per_round": (
+                    plan_round_bits(plan, d, q) if impl == "sparse"
+                    else schedule_round_bits(sched, d, q)),
+            }}
+    for bits in (32, 8):
+        dn, sp = out[f"dense_b{{bits}}"], out[f"sparse_b{{bits}}"]
+        out[f"wire_ratio_dense_over_sparse_b{{bits}}"] = (
+            dn["wire_bytes_per_device"] / max(sp["wire_bytes_per_device"], 1e-9))
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
+    """dense vs sparse on an edge-sampled schedule: HLO wire bytes (the
+    O(m) all-gather vs O(degree) ppermute claim), wall clock, and the
+    expectation-based vs realized-plan bit billing. Results land in
+    BENCH_gossip.json (uploaded as a CI artifact)."""
+    m = 8
+    d = 4096 if smoke else 65536
+    iters = 3 if smoke else 20
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={m}").strip()
+    env["PYTHONPATH"] = str(REPO / "src")
+    src = textwrap.dedent(_COMPARE_SRC).format(m=m, d=d, iters=iters)
+    r = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                       text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"gossip compare subprocess failed:\n{r.stderr}")
+    payload = next(l for l in r.stdout.splitlines()
+                   if l.startswith("JSON::"))[len("JSON::"):]
+    res = json.loads(payload)
+    GOSSIP_JSON.write_text(json.dumps(res, indent=2))
+    rows = []
+    for bits in (32, 8):
+        dn, sp = res[f"dense_b{bits}"], res[f"sparse_b{bits}"]
+        rows.append((
+            f"gossip_sparse_vs_dense_b{bits}",
+            sp["us_per_round"],
+            f"sparse_wireB={sp['wire_bytes_per_device']:.0f}|"
+            f"dense_wireB={dn['wire_bytes_per_device']:.0f}|"
+            f"ratio={res[f'wire_ratio_dense_over_sparse_b{bits}']:.2f}|"
+            f"dense_us={dn['us_per_round']:.1f}|"
+            f"realized_bits={sp['billed_bits_per_round']:.0f}|"
+            f"expected_bits={dn['billed_bits_per_round']:.0f}"))
+    return rows
+
+
 def run(smoke: bool = False):
     m = 8 if smoke else 16
     rounds = 2 if smoke else 30
@@ -59,6 +166,7 @@ def run(smoke: bool = False):
                      f"loss={out['loss']:.4f}|"
                      f"consensus_dist={out['consensus_dist']:.3e}|"
                      f"bits_per_round={bpr:.0f}|acc={out['acc']:.3f}"))
+    rows.extend(gossip_backend_compare(smoke=smoke))
     return rows
 
 

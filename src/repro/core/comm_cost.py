@@ -21,8 +21,8 @@ from .quantize import QuantConfig, message_bits
 from .topology import Graph, MixingSpec, TopologySchedule
 
 __all__ = ["dfedavgm_round_bits", "fedavg_round_bits", "dsgd_round_bits",
-           "schedule_round_bits", "prop3_quantization_wins",
-           "prop3_epsilon_floor", "CommLedger"]
+           "schedule_round_bits", "plan_round_bits",
+           "prop3_quantization_wins", "prop3_epsilon_floor", "CommLedger"]
 
 
 def dfedavgm_round_bits(graph: Graph, d: int,
@@ -39,6 +39,28 @@ def schedule_round_bits(schedule: TopologySchedule, d: int,
     Exact for deterministic kinds; an expectation for sampled ones."""
     qc = quant if quant is not None else QuantConfig(bits=32)
     return message_bits(d, qc) * schedule.expected_directed_edges(t)
+
+
+def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
+                    count_lemma5_replicas: bool = False) -> float:
+    """REALIZED wire accounting for the sparse backend: one round of a
+    compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
+    ``message_bits`` across every directed *plan* edge — a static
+    O(degree) schedule, independent of how the round's ``W_t`` was
+    sampled (masked edges still carry wire words). Compare with
+    :func:`schedule_round_bits`, which bills the *expected* live edge set
+    the dense path would need to touch.
+
+    ``count_lemma5_replicas``: the ``lemma5`` quantized recursion also
+    ships each neighbor's 32-bit replica row alongside the packed words
+    on a TPU mesh (a real edge network would keep neighbor replicas
+    instead); True adds those 32*d bits per edge to the bill.
+    """
+    qc = quant if quant is not None else QuantConfig(bits=32)
+    per_edge = message_bits(d, qc)
+    if count_lemma5_replicas and qc.enabled and qc.delta_mode == "lemma5":
+        per_edge += 32 * d
+    return per_edge * plan.num_directed_wire_edges
 
 
 def dsgd_round_bits(graph: Graph, d: int) -> int:
@@ -87,7 +109,12 @@ class CommLedger:
 
     @staticmethod
     def for_dfedavgm(spec: MixingSpec | TopologySchedule, d: int,
-                     quant: QuantConfig | None) -> "CommLedger":
+                     quant: QuantConfig | None, plan=None) -> "CommLedger":
+        """``plan`` switches from expectation-based billing to the sparse
+        backend's realized-plan-edge billing (pass the compiled
+        GossipPlan when the mixer runs sparse)."""
+        if plan is not None:
+            return CommLedger(plan_round_bits(plan, d, quant))
         if isinstance(spec, TopologySchedule):
             return CommLedger(schedule_round_bits(spec, d, quant))
         return CommLedger(dfedavgm_round_bits(spec.graph, d, quant))

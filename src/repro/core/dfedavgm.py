@@ -40,7 +40,9 @@ class DFedAvgMConfig:
     theta: heavy-ball momentum (paper's theta in [0, 1))
     local_steps: K — local iterations per communication round
     quant: None -> Algorithm 1; QuantConfig -> Algorithm 2
-    mixer_impl: "auto" | "dense" | "ring"
+    mixer_impl: "auto" | "dense" | "ring" | "torus" | "sparse"
+                (see core.mixing.MixerConfig — "sparse" executes the
+                compiled GossipPlan as masked ppermutes)
     """
 
     eta: float = 0.01
@@ -106,12 +108,14 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
 
         metrics = {"loss": jnp.mean(losses)}
+        # The round counter is passed to EVERY mixer uniformly; static
+        # impls ignore it, schedules use it to pick the mixing event.
         if scheduled:
             x_next, active = mixer(state.params, z, key_mix, state.round)
             if with_metrics:
                 metrics["active_frac"] = jnp.mean(active)
         else:
-            x_next = mixer(state.params, z, key_mix)
+            x_next = mixer(state.params, z, key_mix, state.round)
         if with_metrics:
             metrics["consensus_dist"] = consensus_distance(x_next)
             metrics["local_drift"] = consensus_distance(z)
@@ -124,7 +128,7 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
 
 def round_comm_bits(spec: MixingSpec | TopologySchedule, n_params: int,
                     quant: QuantConfig | None,
-                    t: int | None = None) -> float:
+                    t: int | None = None, plan=None) -> float:
     """Bits moved on the graph in ONE round (paper §3.2 accounting): every
     *participating* client sends its (possibly quantized) message across
     each *live* directed edge.
@@ -132,7 +136,13 @@ def round_comm_bits(spec: MixingSpec | TopologySchedule, n_params: int,
     Static spec: exact integer count, as before. TopologySchedule: the
     expectation over the round's sampled edge set (exact for deterministic
     kinds — constant / cycle / random_walk — pass ``t`` to resolve a
-    specific round of a cycle)."""
+    specific round of a cycle). With a compiled ``plan`` (sparse backend)
+    the count switches from expectations to the plan's REALIZED wire
+    edges — what the masked-ppermute collective actually moves each round
+    (see :func:`repro.core.comm_cost.plan_round_bits`)."""
+    if plan is not None:
+        from .comm_cost import plan_round_bits
+        return plan_round_bits(plan, n_params, quant)
     if isinstance(spec, TopologySchedule):
         from .comm_cost import schedule_round_bits
         return schedule_round_bits(spec, n_params, quant, t)

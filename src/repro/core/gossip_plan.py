@@ -1,0 +1,254 @@
+"""GossipPlan: a compiled IR for neighbor-only gossip collectives.
+
+Every mixer in this repo computes x' = W z (or its quantized variants) for
+a mixing matrix whose off-diagonal support lives on a bounded-degree graph.
+The dense einsum realizes that as an m-way all-gather; the sparse backend
+realizes it as a short *program of permutation steps*:
+
+  x'(i) = w_self(i) * z(i) + sum_k w_k(i) * z(src_k(i))
+
+where each step k is a full permutation ``src_k`` of the m clients (devices
+receive from ``src_k(i)``, realized as one ``jax.lax.ppermute``) and the
+per-step weight vectors are *gathered from W* — statically for a
+:class:`MixingSpec`, per round from the sampled ``W_t`` of a
+:class:`TopologySchedule`. Edges the round did not sample simply get
+weight 0 (a "masked" ppermute): the wire moves a constant O(degree)
+schedule of neighbor messages while the weights select the live subgraph.
+
+The compiler guarantees every directed edge of the support graph is
+covered by EXACTLY one step (so gathered weights are never double
+counted); ``src_k(i) == i`` marks an idle slot (no wire, weight forced 0).
+
+Construction:
+  * ring topologies  -> 2 shift permutations (+1 / -1; one for m == 2)
+  * torus (r x c)    -> 4 axis shifts (2 when an axis has length 2)
+  * any other graph  -> greedy edge coloring into matchings (involutions);
+                        at most 2*max_degree - 1 steps
+
+Consumed by both backends in ``core.mixing``: the dense einsum via
+:meth:`GossipPlan.as_matrix` (reference semantics) and the sparse
+shard_map backend via :meth:`wire_pairs` / :meth:`gather_weights`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["GossipPlan", "plan_from_spec", "plan_from_support",
+           "ring_steps", "torus_steps", "matching_steps"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipPlan:
+    """Permutation-step program for one gossip round.
+
+    src:     [n_steps, m] int32 — in step k, client i receives from
+             ``src[k, i]``; ``src[k, i] == i`` is an idle slot.
+    w_self / w_steps: static weights (diag(W) and W[i, src[k, i]]),
+             present when compiled from a static MixingSpec; None for
+             schedule plans, whose weights are gathered per round.
+    """
+
+    m: int
+    src: np.ndarray
+    name: str = "plan"
+    w_self: np.ndarray | None = None      # [m] float64
+    w_steps: np.ndarray | None = None     # [n_steps, m] float64
+
+    def __post_init__(self):
+        src = np.asarray(self.src, dtype=np.int32)
+        if src.ndim != 2 or src.shape[1] != self.m:
+            raise ValueError(f"src must be [n_steps, {self.m}], "
+                             f"got {src.shape}")
+        ref = np.arange(self.m)
+        for k in range(src.shape[0]):
+            if not np.array_equal(np.sort(src[k]), ref):
+                raise ValueError(f"step {k} is not a permutation of "
+                                 f"range({self.m})")
+        object.__setattr__(self, "src", src)
+        if (self.w_self is None) != (self.w_steps is None):
+            raise ValueError("w_self and w_steps must be set together")
+        if self.w_self is not None:
+            ws = np.asarray(self.w_self, np.float64)
+            wk = np.asarray(self.w_steps, np.float64)
+            if ws.shape != (self.m,) or wk.shape != src.shape:
+                raise ValueError("static weight shapes do not match plan")
+            object.__setattr__(self, "w_self", ws)
+            object.__setattr__(self, "w_steps", wk)
+
+    # -- shape / accounting -----------------------------------------------
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def is_static(self) -> bool:
+        return self.w_self is not None
+
+    def wire_pairs(self, k: int) -> list[tuple[int, int]]:
+        """(source, target) device pairs step k actually moves — idle
+        slots are dropped (ppermute zero-fills missing targets, and their
+        weight is 0 by construction)."""
+        return [(int(self.src[k, i]), i) for i in range(self.m)
+                if int(self.src[k, i]) != i]
+
+    @property
+    def num_directed_wire_edges(self) -> int:
+        """Directed messages ONE round of the sparse backend moves — the
+        realized-edge quantity :func:`repro.core.comm_cost.plan_round_bits`
+        bills (masked edges still carry wire words)."""
+        return int((self.src != np.arange(self.m)[None, :]).sum())
+
+    @property
+    def max_degree(self) -> int:
+        return int((self.src != np.arange(self.m)[None, :])
+                   .sum(axis=0).max(initial=0))
+
+    # -- weights -----------------------------------------------------------
+
+    def gather_weights(self, W):
+        """(possibly traced) W [m, m] -> (w_self [m], w_steps [n_steps, m])
+        as f32 jnp arrays; idle slots are forced to weight 0. Jit-safe —
+        this is the per-round mask derivation for time-varying W_t."""
+        import jax.numpy as jnp
+
+        Wj = jnp.asarray(W, jnp.float32)
+        idx = jnp.arange(self.m)
+        src = jnp.asarray(self.src)
+        w_self = Wj[idx, idx]
+        w_steps = Wj[idx[None, :], src]
+        w_steps = jnp.where(src == idx[None, :], 0.0, w_steps)
+        return w_self, w_steps
+
+    def static_weights(self):
+        if not self.is_static:
+            raise ValueError(f"plan {self.name!r} has no static weights")
+        return self.w_self, self.w_steps
+
+    def as_matrix(self) -> np.ndarray:
+        """Reconstruct the dense W a static plan realizes (reference /
+        dense-backend semantics; exact, since weights were gathered)."""
+        w_self, w_steps = self.static_weights()
+        W = np.zeros((self.m, self.m), dtype=np.float64)
+        W[np.arange(self.m), np.arange(self.m)] = w_self
+        for k in range(self.n_steps):
+            for i in range(self.m):
+                j = int(self.src[k, i])
+                if j != i:
+                    W[i, j] += w_steps[k, i]
+        return W
+
+
+# ---------------------------------------------------------------------------
+# Step constructors
+# ---------------------------------------------------------------------------
+
+def ring_steps(m: int) -> np.ndarray:
+    """Ring decomposition: receive-from-left, receive-from-right (which
+    coincide at m == 2 — one step). Maps 1:1 onto ICI ring links."""
+    if m < 2:
+        raise ValueError("ring plan needs m >= 2")
+    left = np.array([(i - 1) % m for i in range(m)], np.int32)
+    if m == 2:
+        return left[None, :]
+    right = np.array([(i + 1) % m for i in range(m)], np.int32)
+    return np.stack([left, right])
+
+
+def torus_steps(rows: int, cols: int) -> np.ndarray:
+    """Torus decomposition: row shifts then column shifts, +-1 each
+    (a length-2 axis has coinciding +-1 shifts — emit one step, so every
+    directed edge is covered exactly once)."""
+    m = rows * cols
+
+    def idx(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    steps = []
+    for s in (1, -1) if rows > 2 else ((1,) if rows == 2 else ()):
+        steps.append(np.array([idx(i // cols + s, i % cols)
+                               for i in range(m)], np.int32))
+    for s in (1, -1) if cols > 2 else ((1,) if cols == 2 else ()):
+        steps.append(np.array([idx(i // cols, i % cols + s)
+                               for i in range(m)], np.int32))
+    if not steps:
+        raise ValueError(f"degenerate torus {rows}x{cols}")
+    return np.stack(steps)
+
+
+def matching_steps(adj: np.ndarray) -> np.ndarray:
+    """Greedy edge coloring of an arbitrary adjacency into matchings —
+    each color class is an involution permutation (i <-> j on matched
+    pairs, identity elsewhere). Uses at most 2*max_degree - 1 colors."""
+    a = np.asarray(adj, dtype=bool)
+    m = a.shape[0]
+    ii, jj = np.nonzero(np.triu(a, k=1))
+    edges = list(zip(ii.tolist(), jj.tolist()))
+    colors_at = [set() for _ in range(m)]
+    steps: list[np.ndarray] = []
+    for i, j in edges:
+        c = 0
+        while c in colors_at[i] or c in colors_at[j]:
+            c += 1
+        while c >= len(steps):
+            steps.append(np.arange(m, dtype=np.int32))
+        steps[c][i], steps[c][j] = j, i
+        colors_at[i].add(c)
+        colors_at[j].add(c)
+    if not steps:  # edgeless support: a single idle step keeps shapes sane
+        steps = [np.arange(m, dtype=np.int32)]
+    return np.stack(steps)
+
+
+def _check_exact_cover(src: np.ndarray, adj: np.ndarray) -> None:
+    """Every directed edge of ``adj`` must appear exactly once across the
+    steps (double coverage would double-count gathered weights)."""
+    m = src.shape[1]
+    count = np.zeros((m, m), dtype=np.int64)
+    for k in range(src.shape[0]):
+        rows = np.nonzero(src[k] != np.arange(m))[0]
+        np.add.at(count, (rows, src[k][rows]), 1)
+    if not np.array_equal(count, np.asarray(adj, dtype=np.int64)):
+        raise ValueError("plan steps do not cover the support graph's "
+                         "directed edges exactly once")
+
+
+# ---------------------------------------------------------------------------
+# Compilers
+# ---------------------------------------------------------------------------
+
+def _steps_for_graph(graph, kind: str | None,
+                     torus_shape: tuple[int, int] | None) -> np.ndarray:
+    if kind == "ring":
+        return ring_steps(graph.m)
+    if kind == "torus":
+        return torus_steps(*torus_shape)
+    return matching_steps(graph.adj)
+
+
+def plan_from_spec(spec) -> GossipPlan:
+    """Static MixingSpec -> plan with baked weights gathered from spec.W
+    (ring/torus use their shift decompositions; any other graph uses
+    matchings — so arbitrary bounded-degree W lower sparsely too)."""
+    src = _steps_for_graph(spec.graph, spec.kind, spec.torus_shape)
+    _check_exact_cover(src, spec.graph.adj)
+    W = np.asarray(spec.W, np.float64)
+    m = spec.m
+    w_self = np.diag(W).copy()
+    w_steps = W[np.arange(m)[None, :], src].copy()
+    w_steps[src == np.arange(m)[None, :]] = 0.0
+    return GossipPlan(m=m, src=src, name=f"plan[{spec.graph.name}]",
+                      w_self=w_self, w_steps=w_steps)
+
+
+def plan_from_support(graph, name: str = "support",
+                      kind: str | None = None,
+                      torus_shape: tuple[int, int] | None = None
+                      ) -> GossipPlan:
+    """Support graph (e.g. a TopologySchedule's union of possible edges)
+    -> structure-only plan; weights are gathered from each round's W_t."""
+    src = _steps_for_graph(graph, kind, torus_shape)
+    _check_exact_cover(src, graph.adj)
+    return GossipPlan(m=graph.m, src=src, name=f"plan[{name}]")

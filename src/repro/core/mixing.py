@@ -1,34 +1,42 @@
 """Gossip mixing x^{t+1}(i) = sum_l w_{i,l} z^t(l)  (paper eqs. 5 and 7).
 
 Client copies are stored *stacked*: every param leaf carries a leading
-``client`` axis of size ``m``. Two interchangeable mixer implementations:
+``client`` axis of size ``m``. All topologies — static ``MixingSpec`` ring
+/ torus / arbitrary graphs AND time-varying ``TopologySchedule`` events —
+lower through one plan/compile/execute pipeline:
 
-* ``dense``  — ``x' = W @ Z`` as an einsum over the client axis. Under pjit
-  with the client axis sharded, XLA lowers this to an all-gather along the
-  client mesh axes. Works for ANY mixing matrix; this is the baseline.
+  compile:  topology -> :class:`~repro.core.gossip_plan.GossipPlan` — a
+            program of permutation steps covering every support edge
+            exactly once, plus self weights (static) or a per-round
+            weight gather from the sampled ``W_t`` (schedules).
 
-* ``ring``   — for ring topologies only: a ``shard_map`` whose body moves
-  each client's tensor to its two ring neighbors via
-  ``jax.lax.ppermute`` — O(1) neighbor traffic instead of an m-way
-  all-gather. This is the TPU-native realization of decentralized gossip:
-  neighbor exchange maps 1:1 onto ICI ring links.
+  execute:  one of two backends consumes the plan:
 
-Quantized variants (Algorithm 2) transmit the *packed uint32 wire words* of
-``Q(z - x)`` through the collective, so the compiled HLO actually moves
-b/32 of the bytes — the saving shows up in the roofline collective term,
-not just in bookkeeping.
+  * ``dense``  — ``x' = W @ Z`` as an einsum over the client axis. Under
+    pjit with the client axis sharded, XLA lowers this to an m-way
+    all-gather. Works for ANY mixing matrix; this is the reference.
 
-Notes on client placement: the client axis of size m may be sharded over
-one or two mesh axes (e.g. ``("pod","data")``); each shard then holds a
-contiguous block of m_local = m / n_shards clients. Ring exchange between
-blocks only needs the *boundary* client of each block, which is what we
-ppermute. Wraparound across the second (outer) mesh axis is handled with a
-select on the axis index (see ``_ring_shift``).
+  * ``sparse`` — a ``shard_map`` (one client per shard) that realizes the
+    plan as *masked* ``ppermute`` steps: O(degree) neighbor traffic per
+    round regardless of how ``W_t`` was sampled. Edges a round did not
+    sample get weight 0 — the wire schedule is static (compile once),
+    the mask is the round's realized topology.
+
+``ring`` and ``torus`` impls are thin plan instances of the sparse
+backend (their shift decompositions map 1:1 onto ICI links).
+
+Quantized variants (Algorithm 2) transmit the *packed uint32 wire words*
+of ``Q(z - x)`` plus one f32 scale through the collective, so the compiled
+HLO actually moves b/32 of the bytes. Two wire codecs: ``seq`` (the
+``core.quantize`` packing — numerically identical to the dense reference,
+used on CPU and in tests) and ``planar`` (the Pallas
+``kernels.quantize_pack`` / ``kernels.dequant_mix`` lane-parallel format,
+fused decode+apply, selected automatically on TPU for ``eq7``).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -41,6 +49,7 @@ try:
 except AttributeError:  # jax < 0.5 keeps shard_map under experimental
     from jax.experimental.shard_map import shard_map as _shard_map
 
+from .gossip_plan import GossipPlan
 from .quantize import (QuantConfig, dequantize_int, pack_bits, quantize_int,
                        unpack_bits)
 from .topology import MixingSpec, TopologySchedule
@@ -48,26 +57,95 @@ from .topology import MixingSpec, TopologySchedule
 Pytree = Any
 
 __all__ = ["MixerConfig", "make_mixer", "make_scheduled_mixer", "mix_dense",
-           "consensus_distance"]
+           "make_plan_mixer", "execute_plan_reference", "consensus_distance"]
+
+_IMPLS = ("auto", "dense", "ring", "torus", "sparse")
+_WIRES = ("auto", "seq", "planar")
+
+
+def _one_client_per_shard(mesh, client_axes: Sequence[str], m: int) -> bool:
+    """The sparse backend maps each client onto one mesh shard; True iff
+    ``mesh``'s client axes multiply out to exactly ``m``."""
+    if mesh is None or not client_axes:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if any(a not in sizes for a in client_axes):
+        return False
+    return int(np.prod([sizes[a] for a in client_axes])) == m
 
 
 @dataclasses.dataclass(frozen=True)
 class MixerConfig:
-    """impl: "dense" | "ring" | "auto"; quant: None disables Algorithm 2."""
+    """Gossip mixer selection.
+
+    impl:  "auto" | "dense" | "ring" | "torus" | "sparse".
+           "dense" is the einsum reference (any W, all-gather traffic);
+           "sparse" executes the compiled GossipPlan as masked ppermutes
+           (any bounded-degree topology, incl. time-varying schedules;
+           needs a mesh with one client per shard); "ring"/"torus" are
+           the plan instances for those static specs; "auto" picks a
+           sparse realization when the mesh fits (except for complete
+           graphs, where the all-gather is optimal), else "dense".
+    quant: None disables Algorithm 2; a QuantConfig moves packed uint32
+           wire words through the collectives.
+    wire:  quantized-sparse wire codec — "seq" (core.quantize packing,
+           numerically identical to the dense reference), "planar"
+           (Pallas quantize_pack/dequant_mix fused kernels, eq7 only),
+           "auto" (planar on TPU, seq elsewhere).
+    """
 
     impl: str = "auto"
     quant: QuantConfig | None = None
+    wire: str = "auto"
 
-    def resolved_impl(self, spec: MixingSpec, mesh) -> str:
+    def __post_init__(self):
+        if self.impl not in _IMPLS:
+            raise ValueError(
+                f"unknown mixer impl {self.impl!r}; allowed impls: "
+                + " | ".join(repr(i) for i in _IMPLS))
+        if self.wire not in _WIRES:
+            raise ValueError(
+                f"unknown wire codec {self.wire!r}; allowed: "
+                + " | ".join(repr(w) for w in _WIRES))
+
+    def resolved_impl(self, spec, mesh,
+                      client_axes: Sequence[str] = ("clients",)) -> str:
         if self.impl != "auto":
             return self.impl
-        if mesh is not None and spec.kind in ("ring", "torus"):
-            return spec.kind
+        if _one_client_per_shard(mesh, client_axes, spec.m):
+            if isinstance(spec, TopologySchedule):
+                return "sparse"
+            if spec.kind in ("ring", "torus"):
+                return spec.kind
+            # Arbitrary static graphs lower sparsely too (matchings) —
+            # except a complete graph, where the all-gather IS optimal.
+            if int(spec.graph.degrees().max()) < spec.m - 1:
+                return "sparse"
         return "dense"
 
 
+def _planar_wire(wire: str) -> bool:
+    if wire == "planar":
+        return True
+    if wire == "seq":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _shard_map_no_repcheck(body, mesh, in_specs, out_specs):
+    """shard_map with replication checking off — pallas_call has no
+    replication rule, so the planar-wire body needs it disabled. The
+    kwarg was renamed check_rep -> check_vma across jax releases."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+
+
 # ---------------------------------------------------------------------------
-# Dense mixer: x' = W @ Z (einsum over client axis). Reference semantics.
+# Dense backend: x' = W @ Z (einsum over client axis). Reference semantics.
 # ---------------------------------------------------------------------------
 
 def mix_dense(W: np.ndarray, stacked: Pytree) -> Pytree:
@@ -81,6 +159,13 @@ def mix_dense(W: np.ndarray, stacked: Pytree) -> Pytree:
     return jax.tree.map(mx, stacked)
 
 
+def _quant_leaf_keys(key: jax.Array, n_leaves: int, m: int) -> jax.Array:
+    """The single source of truth for how a mixing key becomes per-leaf,
+    per-client quantizer keys — shared by the dense reference and the
+    sparse backend so both draw identical stochastic-rounding bits."""
+    return jax.random.split(key, n_leaves * m).reshape(n_leaves, m, 2)
+
+
 def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
                          quant: QuantConfig, key: jax.Array) -> Pytree:
     """Eq. 7 with dense W: x + W @ Q(z - x), quantizing per client & leaf."""
@@ -89,7 +174,7 @@ def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
     leaves_x, treedef = jax.tree.flatten(x)
     leaves_z = treedef.flatten_up_to(z)
     n_leaves = len(leaves_x)
-    keys = jax.random.split(key, n_leaves * m).reshape(n_leaves, m, 2) \
+    keys = _quant_leaf_keys(key, n_leaves, m) \
         if (quant.stochastic and quant.enabled) else [[None] * m] * n_leaves
 
     out = []
@@ -118,36 +203,237 @@ def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
     return jax.tree.unflatten(treedef, out)
 
 
+def execute_plan_reference(plan: GossipPlan, W, stacked: Pytree) -> Pytree:
+    """Mesh-free reference of the sparse backend's *math*: the same
+    step/weight decomposition, with takes instead of ppermutes. Pins the
+    IR semantics to ``mix_dense`` in tests without needing devices."""
+    w_self, w_steps = plan.gather_weights(W)
+    src = jnp.asarray(plan.src)
+
+    def mx(z):
+        zf = z.astype(jnp.float32)
+        bshape = (-1,) + (1,) * (zf.ndim - 1)
+        acc = w_self.reshape(bshape) * zf
+        for k in range(plan.n_steps):
+            acc = acc + w_steps[k].reshape(bshape) * jnp.take(zf, src[k],
+                                                              axis=0)
+        return acc.astype(z.dtype)
+
+    return jax.tree.map(mx, stacked)
+
+
 # ---------------------------------------------------------------------------
-# Scheduled mixer: time-varying W_t sampled per round (dense path)
+# Sparse backend: shard_map + masked ppermute, one client per shard
 # ---------------------------------------------------------------------------
 
-def make_scheduled_mixer(schedule: TopologySchedule,
-                         cfg: MixerConfig) -> Callable:
-    """Build mixer(x, z, key, t) -> (x', active) for a time-varying topology.
+def _full_specs(tree: Pytree, client_axes: Sequence[str],
+                param_specs: Pytree | None) -> Pytree:
+    """PartitionSpecs for shard_map in/out. If the caller provided the
+    model's param specs we reuse them (inner dims may be model-sharded);
+    otherwise only the leading client axis is sharded."""
+    ca = tuple(client_axes)
+    if param_specs is not None:
+        return param_specs
+    return jax.tree.map(
+        lambda leaf: P(ca, *([None] * (leaf.ndim - 1))), tree)
+
+
+def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
+                      param_specs: Pytree | None,
+                      quant: QuantConfig | None,
+                      wire: str = "auto") -> Callable:
+    """Compile ``plan`` to exec(x, z, w_self, w_steps, key) -> x'.
+
+    w_self [m] / w_steps [n_steps, m] may be traced (per-round gathers
+    from a sampled W_t) or constants (static specs); weight 0 masks a
+    plan edge out of the round while the wire schedule stays fixed.
+    """
+    ca = tuple(client_axes)
+    if not _one_client_per_shard(mesh, ca, plan.m):
+        raise ValueError(
+            f"sparse mixer needs a mesh with one client per shard: plan "
+            f"has m={plan.m}, mesh axes {ca!r} don't multiply to it")
+    axis = ca[0] if len(ca) == 1 else ca
+    pairs = [plan.wire_pairs(k) for k in range(plan.n_steps)]
+    n_steps = plan.n_steps
+    m = plan.m
+    w_specs = (P(ca), P(None, ca))
+
+    if quant is None or not quant.enabled:
+
+        def body(z_blocks, wself, wsteps):
+            def leaf(zb):
+                row = zb[0].astype(jnp.float32)
+                acc = wself[0] * row
+                for k in range(n_steps):
+                    if not pairs[k]:
+                        continue
+                    recv = jax.lax.ppermute(row, axis, pairs[k])
+                    acc = acc + wsteps[k, 0] * recv
+                return acc.astype(zb.dtype)[None]
+
+            return jax.tree.map(leaf, z_blocks)
+
+        def ex(x, z, wself, wsteps, key=None):
+            del x, key
+            specs = _full_specs(z, ca, param_specs)
+            fn = _shard_map(body, mesh=mesh,
+                            in_specs=(specs,) + w_specs, out_specs=specs)
+            return fn(z, jnp.asarray(wself, jnp.float32),
+                      jnp.asarray(wsteps, jnp.float32))
+
+        return ex
+
+    # ---- quantized: move packed words + scale through each ppermute ----
+    bits = quant.bits
+    lemma5 = quant.delta_mode == "lemma5"
+    # planar kernels encode with the per-tensor max-abs scale and fuse the
+    # eq7 apply; lemma5 / fixed-scale fall back to the sequential codec.
+    planar_ok = not lemma5 and quant.scale_mode == "per_tensor"
+    if wire == "planar" and not planar_ok:
+        warnings.warn(
+            "wire='planar' supports only delta_mode='eq7' with "
+            "scale_mode='per_tensor'; falling back to the sequential "
+            f"codec for delta_mode={quant.delta_mode!r}, "
+            f"scale_mode={quant.scale_mode!r}", UserWarning, stacklevel=3)
+    planar = _planar_wire(wire) and planar_ok
+
+    def q_body(x_blocks, z_blocks, keys_tree, wself, wsteps):
+        def leaf(xb, zb, kb):
+            inner = xb.shape[1:]
+            n = int(np.prod(inner)) if inner else 1
+            xflat = xb.astype(jnp.float32).reshape(n)
+            delta = (zb - xb).astype(jnp.float32).reshape(n)
+            qkey = kb[0] if quant.stochastic else None
+
+            if planar:
+                from ..kernels.ops import decode_apply_plan, encode_delta
+                words, s = encode_delta(delta, bits,
+                                        stochastic=quant.stochastic,
+                                        key=qkey)
+                svec = s.reshape(1)
+                streams, scales, weights = [words], [svec], [wself]
+                for k in range(n_steps):
+                    if not pairs[k]:
+                        continue
+                    streams.append(jax.lax.ppermute(words, axis, pairs[k]))
+                    scales.append(jax.lax.ppermute(svec, axis, pairs[k]))
+                    weights.append(wsteps[k])
+                out = decode_apply_plan(
+                    xflat, jnp.stack(streams),
+                    jnp.concatenate(scales),
+                    jnp.concatenate([w.reshape(1) for w in weights]),
+                    bits=bits)
+                return out.reshape(xb.shape).astype(xb.dtype)
+
+            code, s = quantize_int(delta, quant, qkey)
+            words = pack_bits(code, bits)
+            svec = s.reshape(1)
+            deq_own = dequantize_int(code, s)
+            if lemma5:
+                acc = wself[0] * (xflat + deq_own)
+            else:
+                acc = xflat + wself[0] * deq_own
+            for k in range(n_steps):
+                if not pairs[k]:
+                    continue
+                rw = jax.lax.ppermute(words, axis, pairs[k])
+                rs = jax.lax.ppermute(svec, axis, pairs[k])
+                deq_r = dequantize_int(unpack_bits(rw, bits, n), rs[0])
+                if lemma5:
+                    rx = jax.lax.ppermute(xflat, axis, pairs[k])
+                    acc = acc + wsteps[k, 0] * (rx + deq_r)
+                else:
+                    acc = acc + wsteps[k, 0] * deq_r
+            return acc.reshape(xb.shape).astype(xb.dtype)
+
+        return jax.tree.map(leaf, x_blocks, z_blocks, keys_tree)
+
+    def ex(x, z, wself, wsteps, key):
+        specs = _full_specs(x, ca, param_specs)
+        leaves, treedef = jax.tree.flatten(x)
+        n_leaves = len(leaves)
+        if quant.stochastic:
+            keys = _quant_leaf_keys(key, n_leaves, m)
+            per_leaf_keys = [keys[i] for i in range(n_leaves)]
+        else:
+            dummy = jnp.zeros((m, 2), jnp.uint32)
+            per_leaf_keys = [dummy for _ in range(n_leaves)]
+        keys_tree = jax.tree.unflatten(treedef, per_leaf_keys)
+        key_specs = jax.tree.unflatten(
+            treedef, [P(ca, None) for _ in per_leaf_keys])
+        smap = _shard_map_no_repcheck if planar else (
+            lambda b, mesh, in_specs, out_specs: _shard_map(
+                b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+        fn = smap(q_body, mesh=mesh,
+                  in_specs=(specs, specs, key_specs) + w_specs,
+                  out_specs=specs)
+        return fn(x, z, keys_tree, jnp.asarray(wself, jnp.float32),
+                  jnp.asarray(wsteps, jnp.float32))
+
+    return ex
+
+
+def make_plan_mixer(plan: GossipPlan, mesh,
+                    client_axes: Sequence[str] = ("clients",),
+                    param_specs: Pytree | None = None,
+                    quant: QuantConfig | None = None,
+                    wire: str = "auto") -> Callable:
+    """Static plan (baked weights) -> mixer(x, z, key=None, t=None) -> x'.
+
+    This is the sparse realization of ANY static MixingSpec: ring and
+    torus lower to their shift decompositions, arbitrary graphs to
+    matchings (see ``gossip_plan``). Quantized plans move packed words.
+    """
+    w_self, w_steps = plan.static_weights()
+    ex = _make_sparse_exec(plan, mesh, client_axes, param_specs, quant,
+                           wire=wire)
+
+    def mixer(x: Pytree, z: Pytree, key=None, t=None) -> Pytree:
+        del t
+        return ex(x, z, w_self, w_steps, key)
+
+    return mixer
+
+
+# ---------------------------------------------------------------------------
+# Scheduled mixer: time-varying W_t sampled per round, either backend
+# ---------------------------------------------------------------------------
+
+def make_scheduled_mixer(schedule: TopologySchedule, cfg: MixerConfig,
+                         mesh=None,
+                         client_axes: Sequence[str] = ("clients",),
+                         param_specs: Pytree | None = None) -> Callable:
+    """Build mixer(x, z, key, t) -> (x', active) for a time-varying
+    topology.
 
     Per round: ``(W_t, active) = schedule.round_event(key, t)`` is computed
     *in-graph* (so the loop stays jittable), inactive clients' fresh ``z``
-    is gated back to their held ``x`` (they "send nothing" — their column of
-    W_t is zero for every active row, and their own row is ``e_i``), then
-    the usual dense gossip runs with the sampled matrix:
+    is gated back to their held ``x`` (they "send nothing" — their column
+    of W_t is zero for every active row, and their own row is ``e_i``),
+    then gossip runs with the sampled matrix through the chosen backend:
 
       unquantized (eq. 5):  x' = W_t @ z_eff
       quantized   (eq. 7):  x' = x + W_t @ Q(z_eff - x)   (or the lemma5
                             recursion x' = W_t @ (x + Q(z_eff - x)))
 
-    Inactive clients quantize Q(0) = 0, so both quantized recursions also
-    hold them exactly. Sparse ppermute realizations of sampled topologies
-    are a roadmap item; this path lowers to one einsum per leaf.
+    Backends: ``dense`` einsum (any W_t, all-gather traffic) or ``sparse``
+    — the schedule's support graph compiles once to a GossipPlan and each
+    round's W_t only *gathers weights* onto the fixed masked-ppermute
+    schedule, so edge-sampled / partial / cycle rounds move O(degree)
+    neighbor bytes instead of O(m). ``auto`` picks sparse when the mesh
+    has one client per shard. Inactive clients quantize Q(0) = 0, so both
+    quantized recursions hold them exactly.
 
     Caveat (same as the static path, see QuantConfig.delta_mode): the
     ``eq7`` recursion is only stable for PSD mixing matrices, and sampled
     W_t (Metropolis on a random subgraph) are NOT guaranteed PSD — prefer
     the default ``lemma5`` mode with stochastic schedules.
     """
-    if cfg.impl not in ("auto", "dense"):
-        raise ValueError("time-varying schedules currently support only the "
-                         f"dense mixer, got impl={cfg.impl!r}")
+    if cfg.impl not in ("auto", "dense", "sparse"):
+        raise ValueError("time-varying schedules support impl 'dense', "
+                         f"'sparse' or 'auto', got impl={cfg.impl!r}")
+    impl = cfg.resolved_impl(schedule, mesh, client_axes)
     quant = cfg.quant
 
     def gate(active):
@@ -156,7 +442,23 @@ def make_scheduled_mixer(schedule: TopologySchedule,
             return jnp.where(mask > 0, zl, xl)
         return per_leaf
 
-    def mixer(x: Pytree, z: Pytree, key: jax.Array, t) -> tuple[Pytree, jnp.ndarray]:
+    if impl == "sparse":
+        plan = schedule.gossip_plan()
+        ex = _make_sparse_exec(plan, mesh, client_axes, param_specs, quant,
+                               wire=cfg.wire)
+
+        def mixer(x: Pytree, z: Pytree, key: jax.Array, t
+                  ) -> tuple[Pytree, jnp.ndarray]:
+            W_t, active, key_q = schedule.round_event(key, t)
+            z_eff = (jax.tree.map(gate(active), z, x)
+                     if schedule.gates_participation else z)
+            w_self, w_steps = plan.gather_weights(W_t)
+            return ex(x, z_eff, w_self, w_steps, key_q), active
+
+        return mixer
+
+    def mixer(x: Pytree, z: Pytree, key: jax.Array, t
+              ) -> tuple[Pytree, jnp.ndarray]:
         W_t, active, key_q = schedule.round_event(key, t)
         z_eff = (jax.tree.map(gate(active), z, x)
                  if schedule.gates_participation else z)
@@ -168,256 +470,31 @@ def make_scheduled_mixer(schedule: TopologySchedule,
 
 
 # ---------------------------------------------------------------------------
-# Ring mixer: shard_map + ppermute along the client mesh axes
+# Static ring / torus: thin plan instances (kept as named constructors)
 # ---------------------------------------------------------------------------
 
-def _axis_index(axes: Sequence[str]) -> dict[str, jnp.ndarray]:
-    return {a: jax.lax.axis_index(a) for a in axes}
-
-
-def _ring_shift(x: jnp.ndarray, axes: Sequence[str], shift: int) -> jnp.ndarray:
-    """Shift shards by +-1 around the ring formed by the flattened
-    (lexicographic) product of ``axes``. Works inside shard_map.
-
-    For a single axis this is one ppermute. For two axes (outer, inner) a
-    +1 shift is: shift along inner; shards at inner==0 instead take the
-    value that also moved one step along outer.
-    """
-    assert shift in (1, -1)
-
-    def perm(n, s):
-        return [(i, (i + s) % n) for i in range(n)]
-
-    if len(axes) == 1:
-        n = jax.lax.axis_size(axes[0])
-        return jax.lax.ppermute(x, axes[0], perm(n, shift))
-    if len(axes) == 2:
-        outer, inner = axes
-        n_out = jax.lax.axis_size(outer)
-        n_in = jax.lax.axis_size(inner)
-        y = jax.lax.ppermute(x, inner, perm(n_in, shift))
-        w = jax.lax.ppermute(y, outer, perm(n_out, shift))
-        idx = jax.lax.axis_index(inner)
-        boundary = 0 if shift == 1 else n_in - 1
-        return jnp.where(idx == boundary, w, y)
-    raise NotImplementedError("client axis over >2 mesh axes")
-
-
-def _neighbor_blocks(block: jnp.ndarray, axes: Sequence[str]
-                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Given this shard's [m_local, ...] block of clients, return the
-    (left_neighbor_row, right_neighbor_row) each of shape [...]: the
-    clients adjacent to this block's first/last client on the global ring.
-    """
-    last = block[-1]
-    first = block[0]
-    from_left = _ring_shift(last, axes, shift=1)    # prev shard's last row
-    from_right = _ring_shift(first, axes, shift=-1)  # next shard's first row
-    return from_left, from_right
-
-
-def _ring_mix_block(block: jnp.ndarray, axes: Sequence[str],
-                    w_self: float, w_nb: float) -> jnp.ndarray:
-    """Mix a [m_local, ...] block with ring weights (w_nb, w_self, w_nb)."""
-    from_left, from_right = _neighbor_blocks(block, axes)
-    up = jnp.concatenate([from_left[None], block[:-1]], axis=0)   # client i-1
-    down = jnp.concatenate([block[1:], from_right[None]], axis=0)  # client i+1
-    return (w_self * block + w_nb * up + w_nb * down).astype(block.dtype)
-
-
-def _ring_specs(tree: Pytree, client_axes: Sequence[str],
-                param_specs: Pytree | None) -> Pytree:
-    """Full PartitionSpecs for shard_map in/out. If the caller provided the
-    model's param specs we reuse them (inner dims may be model-sharded);
-    otherwise only the leading client axis is sharded."""
-    ca = tuple(client_axes)
-    if param_specs is not None:
-        return param_specs
-    return jax.tree.map(
-        lambda leaf: P(ca, *([None] * (leaf.ndim - 1))), tree)
-
-
-def make_ring_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
+def make_ring_mixer(spec: MixingSpec, mesh,
+                    client_axes: Sequence[str] = ("clients",),
                     param_specs: Pytree | None = None,
                     quant: QuantConfig | None = None) -> Callable:
-    """Build mixer(x, z, key) -> x' using ppermute neighbor exchange.
-
-    Requires spec.kind == "ring" and W with uniform neighbor weight.
-    """
+    """Ring gossip as a 2-step shift plan over the sparse backend."""
     if spec.kind != "ring":
         raise ValueError("ring mixer needs a ring MixingSpec")
-    W = spec.W
-    m = spec.m
-    w_self = float(W[0, 0])
-    w_nb = float(W[0, 1]) if m > 1 else 0.0
-    ca = tuple(client_axes)
-
-    if quant is None or not quant.enabled:
-
-        def body(z_blocks: Pytree) -> Pytree:
-            return jax.tree.map(
-                lambda b: _ring_mix_block(b, ca, w_self, w_nb), z_blocks)
-
-        def mixer(x: Pytree, z: Pytree, key=None) -> Pytree:
-            del x, key
-            specs = _ring_specs(z, ca, param_specs)
-            fn = _shard_map(body, mesh=mesh, in_specs=(specs,),
-                               out_specs=specs)
-            return fn(z)
-
-        return mixer
-
-    # ---- quantized ring mixer: move packed words through ppermute ----
-    bits = quant.bits
-
-    def q_body(x_blocks: Pytree, z_blocks: Pytree, keys_leaf: Pytree) -> Pytree:
-        def per_leaf(xb, zb, kb):
-            m_local = xb.shape[0]
-            inner = xb.shape[1:]
-            n = int(np.prod(inner)) if inner else 1
-            delta = (zb - xb).astype(jnp.float32).reshape(m_local, n)
-
-            def enc(row, k):
-                code, s = quantize_int(row, quant,
-                                       k if quant.stochastic else None)
-                return pack_bits(code, bits), s
-
-            if quant.stochastic:
-                words, scales = jax.vmap(enc)(delta, kb)
-            else:
-                words, scales = jax.vmap(lambda r: enc(r, None))(delta)
-            # words: [m_local, n_words] uint32; scales: [m_local]
-
-            # Wire exchange: boundary rows to ring neighbors (packed!).
-            wl, wr = _neighbor_blocks(words, ca)
-            sl, sr = _neighbor_blocks(scales, ca)
-
-            def dec(wrow, srow):
-                return dequantize_int(unpack_bits(wrow, bits, n), srow)
-
-            deq_own = jax.vmap(dec)(words, scales)         # [m_local, n]
-            deq_left = dec(wl, sl)[None]                   # [1, n]
-            deq_right = dec(wr, sr)[None]
-            if quant.delta_mode == "lemma5":
-                # Need neighbors' x too: exchange the boundary rows of x
-                # (param dtype) alongside the packed words.
-                xflat = xb.astype(jnp.float32).reshape(m_local, n)
-                xleft, xright = _neighbor_blocks(xflat, ca)
-                v_own = xflat + deq_own
-                v_left = (xleft[None] + deq_left)
-                v_right = (xright[None] + deq_right)
-                up = jnp.concatenate([v_left, v_own[:-1]], axis=0)
-                down = jnp.concatenate([v_own[1:], v_right], axis=0)
-                mixed = w_self * v_own + w_nb * up + w_nb * down
-                return mixed.reshape(xb.shape).astype(xb.dtype)
-            up = jnp.concatenate([deq_left, deq_own[:-1]], axis=0)
-            down = jnp.concatenate([deq_own[1:], deq_right], axis=0)
-            mixed = w_self * deq_own + w_nb * up + w_nb * down
-            out = xb.astype(jnp.float32) + mixed.reshape(xb.shape)
-            return out.astype(xb.dtype)
-
-        return jax.tree.map(per_leaf, x_blocks, z_blocks, keys_leaf)
-
-    def mixer(x: Pytree, z: Pytree, key: jax.Array) -> Pytree:
-        specs = _ring_specs(x, ca, param_specs)
-        leaves, treedef = jax.tree.flatten(x)
-        n_leaves = len(leaves)
-        # Per-leaf, per-client keys, sharded like [m] over client axes.
-        if quant.stochastic:
-            keys = jax.random.split(key, n_leaves * m)  # [n_leaves*m, ...]
-            per_leaf_keys = [keys[i * m:(i + 1) * m] for i in range(n_leaves)]
-        else:
-            dummy = jnp.zeros((m, 2), jnp.uint32)
-            per_leaf_keys = [dummy for _ in range(n_leaves)]
-        keys_tree = jax.tree.unflatten(treedef, per_leaf_keys)
-        key_specs = jax.tree.unflatten(
-            treedef,
-            [P(ca, *([None] * (k.ndim - 1))) for k in per_leaf_keys])
-        fn = _shard_map(q_body, mesh=mesh,
-                           in_specs=(specs, specs, key_specs),
-                           out_specs=specs)
-        return fn(x, z, keys_tree)
-
-    return mixer
+    return make_plan_mixer(spec.gossip_plan(), mesh, client_axes,
+                           param_specs=param_specs, quant=quant)
 
 
-# ---------------------------------------------------------------------------
-# Torus mixer: 2-D gossip via 4 ppermutes (TPU 2-D mesh native)
-# ---------------------------------------------------------------------------
-
-def _flat_perm(m: int, fn) -> list[tuple[int, int]]:
-    return [(i, fn(i) % m) for i in range(m)]
-
-
-def make_torus_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
-                     param_specs: Pytree | None = None) -> Callable:
-    """Gossip on a (rows x cols) torus of clients with uniform neighbor
-    weights — 4 point-to-point ppermutes per round. Requires exactly one
-    client per shard (m == prod(client_axes sizes)).
-
-    Two layouts:
-      * client axes (pod, data) == (rows, cols): vertical shifts ppermute
-        along pod, horizontal along data — 1:1 with physical ICI links.
-      * one client axis: the torus is embedded in the flattened index
-        (ppermute takes arbitrary permutations).
-    """
+def make_torus_mixer(spec: MixingSpec, mesh,
+                     client_axes: Sequence[str] = ("clients",),
+                     param_specs: Pytree | None = None,
+                     quant: QuantConfig | None = None) -> Callable:
+    """Torus gossip as a 4-shift plan over the sparse backend (2-D TPU
+    mesh native: with client axes (rows, cols) each shift is one ICI
+    neighbor hop)."""
     if spec.kind != "torus":
         raise ValueError("torus mixer needs a torus MixingSpec")
-    rows, cols = spec.torus_shape
-    m = spec.m
-    ca = tuple(client_axes)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    if int(np.prod([sizes[a] for a in ca])) != m:
-        raise ValueError("torus mixer requires one client per shard")
-    w_self = float(spec.W.diagonal()[0])
-    deg = int(spec.graph.degrees()[0])
-    w_nb = (1.0 - w_self) / deg
-
-    def shifts(x):
-        out = []
-        if len(ca) == 2 and sizes[ca[0]] == rows and sizes[ca[1]] == cols:
-            for axis, n in ((ca[0], rows), (ca[1], cols)):
-                # n == 2: +1 and -1 shifts coincide -> two half-weights
-                w_dir = w_nb / 2.0 if n == 2 else w_nb
-                for s in (1, -1):
-                    p = [(i, (i + s) % n) for i in range(n)]
-                    out.append((w_dir, jax.lax.ppermute(x, axis, p)))
-            return out
-        # flattened single-axis embedding
-        axis = ca[0]
-
-        def col_shift(s):
-            return lambda i: (i // cols) * cols + (i % cols + s) % cols
-
-        def row_shift(s):
-            return lambda i: (i + s * cols) % m
-
-        for n, mk in ((cols, col_shift), (rows, row_shift)):
-            w_dir = w_nb / 2.0 if n == 2 else w_nb
-            dirs = (1, -1) if n > 2 else (1, 1)
-            for s in dirs:
-                out.append((w_dir,
-                            jax.lax.ppermute(x, axis, _flat_perm(m, mk(s)))))
-        return out
-
-    def body(z_blocks: Pytree) -> Pytree:
-        def mix_leaf(b):
-            row = b[0]                      # m_local == 1
-            acc = w_self * row.astype(jnp.float32)
-            for w, nb in shifts(row):
-                acc = acc + w * nb.astype(jnp.float32)
-            return acc.astype(b.dtype)[None]
-
-        return jax.tree.map(mix_leaf, z_blocks)
-
-    def mixer(x: Pytree, z: Pytree, key=None) -> Pytree:
-        del x, key
-        specs = _ring_specs(z, ca, param_specs)
-        fn = _shard_map(body, mesh=mesh, in_specs=(specs,),
-                           out_specs=specs)
-        return fn(z)
-
-    return mixer
+    return make_plan_mixer(spec.gossip_plan(), mesh, client_axes,
+                           param_specs=param_specs, quant=quant)
 
 
 # ---------------------------------------------------------------------------
@@ -427,42 +504,63 @@ def make_torus_mixer(spec: MixingSpec, mesh, client_axes: Sequence[str],
 def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
                mesh=None, client_axes: Sequence[str] = ("clients",),
                param_specs: Pytree | None = None) -> Callable:
-    """Return mixer(x_stacked, z_stacked, key) -> x_next_stacked.
+    """Return mixer(x_stacked, z_stacked, key=None, t=None) -> x_next.
 
-    Semantics (both impls, matching the paper):
+    Semantics (both backends, matching the paper):
       unquantized (Alg. 1, eq. 5):  x' = W @ z
       quantized   (Alg. 2, eq. 7):  x' = x + W @ Q(z - x)
 
     A :class:`TopologySchedule` instead of a static spec returns the
     time-varying mixer(x, z, key, t) -> (x', active) — see
-    :func:`make_scheduled_mixer`.
+    :func:`make_scheduled_mixer`. Every mixer accepts the round counter
+    ``t`` (static impls ignore it), so ``make_round_step`` passes it
+    uniformly.
     """
     if isinstance(spec, TopologySchedule):
-        return make_scheduled_mixer(spec, cfg)
-    impl = cfg.resolved_impl(spec, mesh)
+        return make_scheduled_mixer(spec, cfg, mesh=mesh,
+                                    client_axes=client_axes,
+                                    param_specs=param_specs)
+    impl = cfg.resolved_impl(spec, mesh, client_axes)
     quant = cfg.quant
 
-    if impl == "torus" or (impl == "ring" and spec.kind == "torus"):
-        if quant is not None and quant.enabled:
-            # quantized torus falls back to the dense reference path
-            def mixer(x, z, key):
-                return _mix_dense_quantized(spec.W, x, z, quant, key)
-            return mixer
-        return make_torus_mixer(spec, mesh, client_axes,
-                                param_specs=param_specs)
+    if impl == "ring" and spec.kind == "torus":
+        impl = "torus"  # historical alias: ring impl on a torus spec
 
-    if impl == "ring":
-        return make_ring_mixer(spec, mesh, client_axes,
-                               param_specs=param_specs, quant=quant)
+    if impl in ("ring", "torus", "sparse"):
+        if not _one_client_per_shard(mesh, client_axes, spec.m):
+            if impl == "torus" and quant is not None and quant.enabled:
+                # Explicitly requested quantized torus without a usable
+                # mesh: fall back to the dense reference — LOUDLY (this
+                # used to happen silently).
+                warnings.warn(
+                    "quantized torus mixer without a one-client-per-shard "
+                    "mesh falls back to the DENSE reference path (all-"
+                    "gather traffic, not 4 ppermutes); pass a mesh whose "
+                    "client axes multiply to m for the sparse backend",
+                    UserWarning, stacklevel=2)
+
+                def mixer(x, z, key=None, t=None):
+                    return _mix_dense_quantized(spec.W, x, z, quant, key)
+                return mixer
+            raise ValueError(
+                f"mixer impl {impl!r} needs a mesh with one client per "
+                f"shard (m={spec.m}, client_axes={tuple(client_axes)!r})")
+        if impl != "sparse" and spec.kind != impl:
+            raise ValueError(f"{impl} mixer needs a {impl} MixingSpec, "
+                             f"got kind={spec.kind!r}")
+        return make_plan_mixer(spec.gossip_plan(), mesh, client_axes,
+                               param_specs=param_specs, quant=quant,
+                               wire=cfg.wire)
 
     if impl == "dense":
         if quant is None or not quant.enabled:
-            def mixer(x, z, key=None):
-                del x, key
+            def mixer(x, z, key=None, t=None):
+                del x, key, t
                 return mix_dense(spec.W, z)
             return mixer
 
-        def mixer(x, z, key):
+        def mixer(x, z, key=None, t=None):
+            del t
             return _mix_dense_quantized(spec.W, x, z, quant, key)
         return mixer
 

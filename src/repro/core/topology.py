@@ -292,6 +292,14 @@ class MixingSpec:
         check_mixing_matrix(W, g)
         return MixingSpec(graph=g, W=W, kind="dense")
 
+    def gossip_plan(self):
+        """Compile this static spec into a :class:`~repro.core.gossip_plan.
+        GossipPlan` with baked weights — the IR both mixer backends
+        consume (ring/torus lower to their shift decompositions, any other
+        graph to matchings)."""
+        from .gossip_plan import plan_from_spec
+        return plan_from_spec(self)
+
     @staticmethod
     def torus(rows: int, cols: int,
               self_weight: float = 0.2) -> "MixingSpec":
@@ -454,6 +462,27 @@ class TopologySchedule:
              .at[i, j].add(0.5).at[j, i].add(0.5))
         active = jnp.zeros((m,), jnp.float32).at[i].set(1.0).at[j].set(1.0)
         return W, active
+
+    def support_graph(self) -> Graph:
+        """The union of every edge ANY round of this schedule can sample —
+        the static support the sparse backend compiles its ppermute plan
+        against (per-round W_t then masks the unsampled edges to 0)."""
+        if self.kind == "constant":
+            adj = (self.base_W - np.diag(np.diag(self.base_W))) != 0
+        elif self.kind == "cycle":
+            adj = np.zeros((self.m, self.m), dtype=bool)
+            for W in self.Ws:
+                adj |= (W - np.diag(np.diag(W))) != 0
+        else:
+            adj = np.asarray(self.adj) != 0
+        return Graph(adj, name=f"support[{self.name}]")
+
+    def gossip_plan(self):
+        """Structure-only :class:`~repro.core.gossip_plan.GossipPlan` over
+        :meth:`support_graph`; weights are gathered from each round's
+        sampled ``W_t`` (see ``GossipPlan.gather_weights``)."""
+        from .gossip_plan import plan_from_support
+        return plan_from_support(self.support_graph(), name=self.name)
 
     def round_event(self, key_mix, t):
         """Derive round t's (W_t, active, key_quant) from the round-step's

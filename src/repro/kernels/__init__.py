@@ -8,4 +8,5 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a padded/jit'd wrapper
 in ``ops.py``; tests sweep shapes/dtypes in interpret mode against ref.
 """
 from .ops import (default_interpret, encode_delta, decode_apply_ring,  # noqa
-                  momentum_update_flat, make_fused_momentum_update)
+                  decode_apply_plan, momentum_update_flat,
+                  make_fused_momentum_update)

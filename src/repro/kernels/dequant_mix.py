@@ -42,6 +42,58 @@ def _dequant_mix_kernel(x_ref, qo_ref, ql_ref, qr_ref, s_ref, out_ref, *,
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _dequant_mix_plan_kernel(x_ref, q_ref, sw_ref, out_ref, *, bits: int,
+                             n_streams: int):
+    """Plan-generic fused apply (eq. 7 over a GossipPlan):
+
+        out = x + sum_k weight[k] * deq(stream[k], scale[k])
+
+    Streams are the client's OWN packed words plus one received stream per
+    plan step; scales AND weights are runtime values (per-round gathered
+    weights of a time-varying W_t), packed as sw_ref = [[scales],[weights]].
+    """
+    per = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    offset = jnp.int32(1 << (bits - 1))
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (per, 1), 0) * bits
+
+    acc = x_ref[...].astype(jnp.float32)
+    for k in range(n_streams):
+        fields = (q_ref[k][None, :] >> shifts) & mask
+        deq = (fields.astype(jnp.int32) - offset).astype(jnp.float32) \
+            * sw_ref[0, k]
+        acc += sw_ref[1, k] * deq
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequant_mix_plan_pallas(x2d: jnp.ndarray, streams: jnp.ndarray,
+                            scales: jnp.ndarray, weights: jnp.ndarray, *,
+                            bits: int, interpret: bool = False
+                            ) -> jnp.ndarray:
+    """x2d: [per, W] (f32/bf16); streams: uint32 [k, W]; scales/weights:
+    f32 [k] (traced OK — the per-round mask). Returns [per, W]."""
+    per, w = x2d.shape
+    k = streams.shape[0]
+    assert per == 32 // bits and w % LANE_BLOCK == 0, (per, w)
+    grid = (w // LANE_BLOCK,)
+    kernel = functools.partial(_dequant_mix_plan_kernel, bits=bits,
+                               n_streams=k)
+    sw = jnp.stack([scales, weights]).astype(jnp.float32)  # [2, k]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((2, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, streams, sw)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bits", "w_self", "w_nb", "interpret"))
 def dequant_mix_pallas(x2d: jnp.ndarray, q_own: jnp.ndarray,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dequant_mix import dequant_mix_pallas
+from .dequant_mix import dequant_mix_pallas, dequant_mix_plan_pallas
 from .momentum_sgd import LANE_BLOCK as MS_LANE, ROW_BLOCK as MS_ROW
 from .momentum_sgd import momentum_sgd_pallas
 from .quantize_pack import quantize_pack_pallas
@@ -67,6 +67,30 @@ def decode_apply_ring(x: jnp.ndarray, q_own: jnp.ndarray, q_left: jnp.ndarray,
     out2d = dequant_mix_pallas(x2d, q_own, q_left, q_right, scales,
                                bits=bits, w_self=w_self, w_nb=w_nb,
                                interpret=interpret)
+    return out2d.reshape(-1)[:n].astype(x.dtype)
+
+
+def decode_apply_plan(x: jnp.ndarray, streams: jnp.ndarray,
+                      scales: jnp.ndarray, weights: jnp.ndarray, *,
+                      bits: int, interpret: bool | None = None
+                      ) -> jnp.ndarray:
+    """Fused GossipPlan apply for a flat param vector x [n] (eq. 7):
+
+        out = x + sum_k weights[k] * deq(streams[k], scales[k])
+
+    ``streams`` [k, W] uint32 are the planar-packed own + received wire
+    words of one gossip round; ``weights`` may be traced (the per-round
+    mask gathered from a sampled W_t — weight 0 kills an unsampled edge).
+    This is the sparse backend's decode hot path: one VMEM pass instead
+    of k dequantized f32 tensors in HBM.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n = x.shape[0]
+    per, w = planar_pad_len(n, bits)
+    x2d = jnp.pad(x.astype(jnp.float32), (0, per * w - n)).reshape(per, w)
+    out2d = dequant_mix_plan_pallas(x2d, streams, scales, weights,
+                                    bits=bits, interpret=interpret)
     return out2d.reshape(-1)[:n].astype(x.dtype)
 
 

@@ -132,7 +132,8 @@ def build_train_step(cfg: ArchConfig, mesh, shape: InputShape, *,
     meta = dict(kind="train", m=m, K=K, local_bs=local_bs, seq=seq,
                 strategy=strat.name, client_axes=strat.client_axes,
                 tokens_per_step=m * K * local_bs * seq,
-                mixer=dfed.mixer_config().resolved_impl(spec, mesh),
+                mixer=dfed.mixer_config().resolved_impl(
+                    spec, mesh, strat.client_axes),
                 quant_bits=(dfed.quant.bits if dfed.quant else 32))
     return Built(fn=jit_step, args=(state_sds, batch_sds), meta=meta)
 

@@ -142,7 +142,8 @@ def main():
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--bits", type=int, default=32,
                     help="gossip wire quantization (train shapes)")
-    ap.add_argument("--mixer", default=None, choices=[None, "ring", "dense"])
+    ap.add_argument("--mixer", default=None,
+                    choices=[None, "ring", "torus", "sparse", "dense"])
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--eta", type=float, default=1e-3)
     args = ap.parse_args()

@@ -35,6 +35,21 @@ def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes, **auto_axis_types_kw(len(axes)))
 
 
+def make_client_mesh(m: int, axis: str = "clients"):
+    """1-D mesh with ONE CLIENT PER DEVICE over the first ``m`` local
+    devices — the layout the sparse GossipPlan backend requires — or
+    ``None`` when the host has fewer than ``m`` devices (callers fall
+    back to the dense mixer). Uses ``jax.sharding.Mesh`` directly so it
+    works on jax releases without ``jax.make_mesh``."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < m:
+        return None
+    return Mesh(np.array(devs[:m]), (axis,))
+
+
 # v5e hardware constants for the roofline analysis (per chip / per link)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

@@ -68,6 +68,11 @@ def main(argv=None):
     ap.add_argument("--eta", type=float, default=3e-2)
     ap.add_argument("--theta", type=float, default=0.9)
     ap.add_argument("--bits", type=int, default=32)
+    ap.add_argument("--mixer-impl", default="auto",
+                    choices=["auto", "dense", "sparse"],
+                    help="gossip backend: dense einsum vs sparse GossipPlan"
+                         " ppermutes; auto picks sparse when this host has"
+                         " >= one device per client")
     ap.add_argument("--self-weight", type=float, default=0.5,
                     help="ring self weight (0.5 => PSD W, safe for Alg. 2)")
     ap.add_argument("--schedule", default="static",
@@ -95,13 +100,32 @@ def main(argv=None):
     m = args.clients
 
     quant = QuantConfig(bits=args.bits) if args.bits < 32 else None
+    spec = build_topology(args, m)
+
+    # Backend selection: sparse needs a one-client-per-shard mesh.
+    mesh = client_axes = None
+    if args.mixer_impl in ("auto", "sparse"):
+        from .mesh import make_client_mesh
+        mesh = make_client_mesh(m)
+        if mesh is None and args.mixer_impl == "sparse":
+            raise SystemExit(f"--mixer-impl sparse needs >= {m} devices "
+                             f"(one per client), this host has "
+                             f"{jax.device_count()}")
+    impl = "sparse" if mesh is not None else "dense"
+    client_axes = ("clients",) if mesh is not None else ()
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
                           local_steps=args.local_steps, quant=quant,
-                          mixer_impl="dense")
-    spec = build_topology(args, m)
+                          mixer_impl=impl)
+    plan = spec.gossip_plan() if impl == "sparse" else None
     if isinstance(spec, TopologySchedule):
         print(f"topology schedule: {spec.name} "
               f"(E[directed edges/round] = {spec.expected_directed_edges():.1f})")
+    if plan is not None:
+        print(f"mixer backend: sparse ({plan.name}: {plan.n_steps} ppermute "
+              f"steps, {plan.num_directed_wire_edges} realized wire edges "
+              f"per round)")
+    else:
+        print("mixer backend: dense (einsum reference)")
 
     key = jax.random.PRNGKey(args.seed)
     k_init, k_state, k_data = jax.random.split(key, 3)
@@ -110,11 +134,14 @@ def main(argv=None):
         lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), params)
 
     loss = lambda p, b, r: M.loss_fn(p, cfg, b, r)
-    step = jax.jit(make_round_step(loss, dfed, spec))
+    step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
+                                   client_axes=client_axes or ()))
     state = init_round_state(stacked, k_state)
 
     d = cfg.n_params()
-    ledger = CommLedger(round_comm_bits(spec, d, quant))
+    # Sparse backend: bill the plan's realized wire edges, not the
+    # schedule's expectation.
+    ledger = CommLedger(round_comm_bits(spec, d, quant, plan=plan))
     t0 = time.time()
     for t in range(args.rounds):
         batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,

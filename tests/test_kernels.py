@@ -9,8 +9,9 @@ pytest.importorskip("hypothesis")  # dev dep: bare env skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core import local_train
-from repro.kernels import (decode_apply_ring, encode_delta,
-                           make_fused_momentum_update, momentum_update_flat)
+from repro.kernels import (decode_apply_plan, decode_apply_ring,
+                           encode_delta, make_fused_momentum_update,
+                           momentum_update_flat)
 from repro.kernels import ref
 from repro.kernels.dequant_mix import dequant_mix_pallas
 from repro.kernels.quantize_pack import quantize_pack_pallas
@@ -62,6 +63,30 @@ def test_dequant_mix_matches_ref(bits, n, dtype):
     atol = 1e-6 if dtype == jnp.float32 else 1e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expected, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("bits", (4, 8, 16))
+@pytest.mark.parametrize("k", (1, 3, 5))
+@pytest.mark.parametrize("n", (100, 4096))
+def test_dequant_mix_plan_matches_ref(bits, k, n):
+    """Plan-generic fused apply (k wire streams, runtime weights) — the
+    sparse GossipPlan backend's decode hot path."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    words, scales = [], []
+    for i in range(k):
+        d = jax.random.normal(jax.random.PRNGKey(2 + i), (n,)) * 0.05
+        w, s = encode_delta(d, bits, stochastic=False)
+        words.append(w)
+        scales.append(s)
+    weights = jax.random.uniform(jax.random.PRNGKey(9), (k,))
+    out = decode_apply_plan(x, jnp.stack(words), jnp.stack(scales), weights,
+                            bits=bits)
+    expected = x
+    for i in range(k):
+        expected = expected + weights[i] * ref.unpack_dequant_ref(
+            words[i], bits, scales[i], n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-5)
 
 
 @given(st.integers(1, 40000), st.sampled_from([0.0, 0.5, 0.9, 0.99]),
