@@ -1,0 +1,154 @@
+"""Async vs sync gossip under a straggler tail: virtual wall-clock to a
+target loss (the headline claim of the async engine — beyond-paper; cf.
+DeceFL arXiv:2107.07171).
+
+Both arms train the paper's 2NN on the synthetic classification task over
+an edge-sampled ring (m=8) with the SAME lognormal straggler-tail speed
+model (one client 10x slower). The synchronous barrier pays
+``max_i duration_i`` per round — the straggler's time — while the async
+engine lets the seven fast clients keep mixing and folds the straggler's
+stale parameters in with downweighted mixing weights. We record each
+arm's (virtual time, eval loss) curve, pick a target loss from the sync
+curve, and report the virtual wall-clock each arm needs to reach it.
+
+  PYTHONPATH=src python benchmarks/bench_async.py --smoke
+
+Writes BENCH_async.json at the repo root (uploaded as a CI artifact
+alongside BENCH_gossip.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AsyncConfig, DFedAvgMConfig, SpeedModel,
+                        TopologySchedule, average_params, init_async_state,
+                        init_round_state, make_async_engine, make_round_step)
+from repro.core.topology import ring_graph
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import init_2nn
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ASYNC_JSON = REPO / "BENCH_async.json"
+
+try:
+    from .common import loss_2nn
+except ImportError:  # standalone: python benchmarks/bench_async.py
+    import pathlib as _p
+    import sys
+    sys.path.insert(0, str(_p.Path(__file__).resolve().parent.parent))
+    from benchmarks.common import loss_2nn
+
+
+def _eval_loss(params, data) -> float:
+    batch = {"x": jnp.asarray(data.x), "y": jnp.asarray(data.y)}
+    return float(loss_2nn(params, batch, None))
+
+
+def _time_to_target(times, losses, target):
+    """First virtual time at which the curve reaches the target loss."""
+    for t, l in zip(times, losses):
+        if l <= target:
+            return t
+    return None
+
+
+def run_compare(m=8, K=2, batch=32, rounds=40, eta=0.05, theta=0.9,
+                p_edge=0.7, seed=0, speed: SpeedModel | None = None,
+                max_staleness=8):
+    speed = speed or SpeedModel.straggler(mean=1.0, sigma=0.5,
+                                          frac=1.0 / m, factor=10.0)
+    data = classification_dataset(n=4000, seed=0)
+    fed = FederatedDataset.make(data, m, iid=True, seed=seed)
+    sched = TopologySchedule.edge_sample(ring_graph(m), p_edge=p_edge)
+    cfg = DFedAvgMConfig(eta=eta, theta=theta, local_steps=K,
+                         mixer_impl="dense")
+    p0 = init_2nn(jax.random.PRNGKey(seed))
+    stacked = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), p0)
+
+    # --- synchronous arm: the barrier bills max_i duration_i per round ---
+    step = jax.jit(make_round_step(loss_2nn, cfg, sched))
+    st = init_round_state(stacked, jax.random.PRNGKey(seed + 1))
+    clock_key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), 7)
+    sync_t, sync_loss, t_virtual = [], [], 0.0
+    for t in range(rounds):
+        st, _ = step(st, fed.round_batches(t, K=K, batch=batch, seed=seed))
+        clock_key, k_dur = jax.random.split(clock_key)
+        t_virtual += float(jnp.max(speed.draw(k_dur, m)))
+        sync_t.append(t_virtual)
+        sync_loss.append(_eval_loss(average_params(st.params), data))
+
+    # --- asynchronous arm: same speed model, no barrier ------------------
+    acfg = AsyncConfig(speed=speed, max_staleness=max_staleness)
+    engine = jax.jit(make_async_engine(loss_2nn, cfg, sched, acfg))
+    ast = init_async_state(stacked, jax.random.PRNGKey(seed + 1), speed)
+    async_t, async_loss = [], []
+    for chunk in range(rounds):
+        evs = [fed.round_batches(chunk * m + e, K=K, batch=batch, seed=seed)
+               for e in range(m)]
+        batches = jax.tree.map(lambda *ls: jnp.stack(ls), *evs)
+        ast, _ = engine(ast, batches)
+        async_t.append(float(ast.clock))
+        async_loss.append(_eval_loss(average_params(ast.params), data))
+
+    # Target: what the sync arm achieves three quarters of the way in.
+    target = sync_loss[min(rounds - 1, max(0, int(0.75 * rounds) - 1))]
+    t_sync = _time_to_target(sync_t, sync_loss, target)
+    t_async = _time_to_target(async_t, async_loss, target)
+    out = {
+        "m": m, "K": K, "rounds": rounds, "schedule": sched.name,
+        "speed_model": {"kind": speed.kind, "mean": speed.mean,
+                        "sigma": speed.sigma,
+                        "straggler_frac": speed.straggler_frac,
+                        "straggler_factor": speed.straggler_factor},
+        "max_staleness": max_staleness,
+        "target_loss": target,
+        "sync_time_to_target": t_sync,
+        "async_time_to_target": t_async,
+        "speedup_virtual_wallclock": (t_sync / t_async
+                                      if t_sync and t_async else None),
+        "async_beats_sync": (t_async is not None and t_sync is not None
+                             and t_async < t_sync),
+        "sync_final": {"time": sync_t[-1], "loss": sync_loss[-1]},
+        "async_final": {"time": async_t[-1], "loss": async_loss[-1]},
+        "sync_curve": [[round(t, 3), round(l, 5)]
+                       for t, l in zip(sync_t, sync_loss)],
+        "async_curve": [[round(t, 3), round(l, 5)]
+                        for t, l in zip(async_t, async_loss)],
+    }
+    return out
+
+
+def run(smoke: bool = False):
+    res = run_compare(rounds=3 if smoke else 40,
+                      K=2 if smoke else 2, batch=8 if smoke else 32)
+    ASYNC_JSON.write_text(json.dumps(res, indent=2))
+    sp = res["speedup_virtual_wallclock"]
+    return [(
+        "async_vs_sync_straggler",
+        0.0 if res["async_time_to_target"] is None
+        else res["async_time_to_target"] * 1e6,
+        f"target_loss={res['target_loss']:.4f}|"
+        f"sync_t={res['sync_time_to_target']}|"
+        f"async_t={res['async_time_to_target']}|"
+        f"speedup={sp if sp is None else round(sp, 2)}|"
+        f"beats_sync={res['async_beats_sync']}")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run — CI entrypoint check")
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

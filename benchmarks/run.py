@@ -19,6 +19,7 @@ MODULES = [
     "bench_comm_cost",        # Prop 3 table per assigned arch
     "bench_topology",         # beyond-paper: ring vs torus gossip
     "bench_timevarying",      # beyond-paper: time-varying gossip schedules
+    "bench_async",            # beyond-paper: async engine vs sync barrier
     "bench_kernels",          # kernel microbench
     "bench_roofline",         # dry-run roofline table
 ]

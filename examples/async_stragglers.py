@@ -1,0 +1,73 @@
+"""Async gossip demo: 8 clients, one 10x straggler, no round barrier.
+
+Each client draws its compute time from a straggler-tailed speed model and
+mixes the moment it finishes — neighbors still computing contribute their
+last published parameters, downweighted by how many local rounds stale
+they are. Watch the event log: the seven fast clients keep a brisk gossip
+cadence while client 0 (the straggler) surfaces rarely, and the engine
+folds it back in without ever stalling the fleet.
+
+Run:  PYTHONPATH=src python examples/async_stragglers.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AsyncConfig, DFedAvgMConfig, MixingSpec, SpeedModel,
+                        average_params, init_async_state, make_async_engine,
+                        make_round_step)
+from repro.data import FederatedDataset, classification_dataset
+from repro.models.paper_nets import apply_2nn, init_2nn, softmax_xent
+
+M_CLIENTS, K, BATCH, EVENTS = 8, 2, 32, 96
+
+data = classification_dataset(n=4000, d=784, seed=0)
+fed = FederatedDataset.make(data, M_CLIENTS, iid=True)
+
+def loss_fn(params, batch, rng):
+    return softmax_xent(apply_2nn(params, batch["x"]), batch["y"])
+
+params = init_2nn(jax.random.PRNGKey(0))
+stacked = jax.tree.map(lambda t: jnp.broadcast_to(t[None],
+                                                  (M_CLIENTS,) + t.shape),
+                       params)
+
+spec = MixingSpec.ring(M_CLIENTS, self_weight=0.5)
+cfg = DFedAvgMConfig(eta=0.05, theta=0.9, local_steps=K)
+acfg = AsyncConfig(
+    speed=SpeedModel.straggler(mean=1.0, sigma=0.4,
+                               frac=1.0 / M_CLIENTS, factor=10.0),
+    max_staleness=8)
+
+# Single events through the round-step API (so we can log each one)...
+event = jax.jit(make_round_step(loss_fn, cfg, spec, async_cfg=acfg))
+state = init_async_state(stacked, jax.random.PRNGKey(1), acfg.speed)
+prev_version = np.asarray(state.version)
+print(f"straggler set: clients 0..{acfg.speed.n_stragglers(M_CLIENTS) - 1} "
+      f"({acfg.speed.straggler_factor:.0f}x slower)")
+for t in range(EVENTS):
+    state, metrics = event(state, fed.round_batches(t, K=K, batch=BATCH))
+    version = np.asarray(state.version)
+    finished = np.nonzero(version != prev_version)[0]
+    prev_version = version
+    if t % 8 == 0 or t == EVENTS - 1:
+        print(f"event {t:3d}  t={float(state.clock):6.2f}  "
+              f"finished={finished.tolist()}  "
+              f"max_staleness={int(metrics['max_staleness'])}  "
+              f"loss={float(metrics['loss']):.4f}")
+
+avg = average_params(state.params)
+acc = (jnp.argmax(apply_2nn(avg, jnp.asarray(data.x)), -1)
+       == jnp.asarray(data.y)).mean()
+print(f"consensus-model accuracy after {EVENTS} events "
+      f"(virtual t={float(state.clock):.1f}): {float(acc):.3f}")
+
+# ...and the same queue as ONE compiled lax.scan (the in-graph engine).
+engine = jax.jit(make_async_engine(loss_fn, cfg, spec, acfg))
+state2 = init_async_state(stacked, jax.random.PRNGKey(1), acfg.speed)
+evs = [fed.round_batches(t, K=K, batch=BATCH) for t in range(EVENTS)]
+batches = jax.tree.map(lambda *ls: jnp.stack(ls), *evs)
+state2, ms = engine(state2, batches)
+same = all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+           zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params)))
+print(f"lax.scan engine reproduces the event loop bit-for-bit: {same}")

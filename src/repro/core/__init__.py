@@ -10,15 +10,20 @@ from .quantize import (QuantConfig, quantize, quantize_int, dequantize_int,  # n
                        dequantize_pytree, message_bits)
 from .local_sgd import local_train, heavy_ball_update  # noqa
 from .gossip_plan import (GossipPlan, plan_from_spec,  # noqa
-                          plan_from_support)
+                          plan_from_support, plan_from_matrix)
 from .mixing import (MixerConfig, make_mixer, make_scheduled_mixer,  # noqa
-                     make_plan_mixer, mix_dense, execute_plan_reference,
-                     consensus_distance)
+                     make_plan_mixer, make_event_mixer, mix_dense,
+                     execute_plan_reference, consensus_distance)
 from .dfedavgm import (DFedAvgMConfig, RoundState, init_round_state,  # noqa
                        make_round_step, average_params, round_comm_bits)
+from .event_clock import SpeedModel, next_event  # noqa
+from .async_gossip import (AsyncConfig, AsyncRoundState,  # noqa
+                           init_async_state, staleness_weights,
+                           make_async_round_step, make_async_engine)
 from .baselines import (FedAvgConfig, make_fedavg_step, DSGDConfig,  # noqa
                         make_dsgd_step)
 from .comm_cost import (CommLedger, dfedavgm_round_bits, fedavg_round_bits,  # noqa
                         dsgd_round_bits, schedule_round_bits,
-                        plan_round_bits, prop3_quantization_wins,
-                        prop3_epsilon_floor, bottleneck_bits)
+                        plan_round_bits, async_event_bits,
+                        prop3_quantization_wins, prop3_epsilon_floor,
+                        bottleneck_bits)

@@ -1,0 +1,274 @@
+"""Event-driven asynchronous DFedAvgM with staleness-aware mixing.
+
+The paper's Algorithms 1/2 put a *global round barrier* between local SGD
+and gossip: no pair mixes until every client has finished its K local
+steps, so each round costs the fleet ``max_i duration_i`` — under a heavy
+straggler tail nearly all clients sit idle. This subsystem drops the
+barrier (DeceFL arXiv:2107.07171 / AD-PSGD flavor, built on the
+time-varying ``TopologySchedule`` machinery):
+
+  * every client draws its compute duration from a pluggable
+    :class:`~repro.core.event_clock.SpeedModel` and finishes local SGD on
+    its own virtual clock;
+  * an *event* fires when the earliest client(s) finish: they mix
+    immediately with their graph neighbors' *currently published*
+    parameters, while busy clients keep computing and hold theirs;
+  * a neighbor's published parameters may be **stale** — ``version[j]``
+    counts client j's completed local rounds, and the mixing weight on a
+    neighbor lagging ``s = version[i] - version[j]`` rounds is discounted
+    by ``rho(s)`` (``1/(1+s)`` or ``gamma^s``, hard-zeroed beyond
+    ``max_staleness``), with the removed mass folded back into the self
+    weight so every row stays stochastic (:func:`staleness_weights`).
+
+The engine is fully in-graph: the "event queue" is the vector of
+per-client next-ready times carried in :class:`AsyncRoundState`, one event
+is one :func:`make_async_round_step` application, and
+:func:`make_async_engine` runs a whole queue of events as a single
+``lax.scan``. Mixing lowers through the same backends as the synchronous
+path — the dense einsum reference or the compiled ``GossipPlan`` sparse
+masked-ppermute collective (``make_event_mixer``) — and per-event realized
+bytes are billed via ``CommLedger`` (`repro.core.comm_cost.
+async_event_bits`).
+
+Degenerate case pinned by tests: under a **constant** speed model every
+client finishes every event simultaneously, staleness never develops, and
+the engine reproduces synchronous ``make_round_step`` *bit for bit* (the
+PRNG chain, weight matrices, and collectives are identical).
+
+Asynchrony changes the algorithm: the realized mixing matrices are
+row-stochastic but no longer symmetric, so Theorem 1 does not literally
+apply — convergence follows the time-varying/asynchronous analyses of the
+follow-up papers. ``benchmarks/bench_async.py`` measures the payoff:
+virtual wall-clock to a target loss under a straggler tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dfedavgm import DFedAvgMConfig
+from .event_clock import SpeedModel, next_event
+from .local_sgd import local_train
+from .mixing import consensus_distance, make_event_mixer
+from .topology import MixingSpec, TopologySchedule
+
+Pytree = Any
+LossFn = Callable[..., jnp.ndarray]
+
+__all__ = ["AsyncConfig", "AsyncRoundState", "init_async_state",
+           "staleness_weights", "make_async_round_step",
+           "make_async_engine"]
+
+# Salt folded into the model key to derive the independent clock-PRNG
+# chain; any constant works, it just must not collide with a split index.
+_CLOCK_SALT = 0x61737963  # "asyc"
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Asynchronous-engine knobs (the algorithmic hyper-parameters stay in
+    :class:`~repro.core.dfedavgm.DFedAvgMConfig`).
+
+    speed:         per-client compute-duration distribution.
+    max_staleness: neighbors more than this many local rounds behind get
+                   mixing weight 0 (their mass folds into the self
+                   weight).
+    discount:      staleness discount rho(s): "inverse" -> 1/(1+s),
+                   "power" -> gamma**s. rho(0) == 1 exactly, so fresh
+                   neighbors are never downweighted.
+    gamma:         base of the "power" discount.
+    """
+
+    speed: SpeedModel = SpeedModel.constant()
+    max_staleness: int = 8
+    discount: str = "inverse"   # inverse | power
+    gamma: float = 0.5
+
+    def __post_init__(self):
+        if self.discount not in ("inverse", "power"):
+            raise ValueError(f"unknown staleness discount "
+                             f"{self.discount!r}; allowed: inverse | power")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if not 0.0 < self.gamma <= 1.0:
+            raise ValueError("need 0 < gamma <= 1")
+
+
+class AsyncRoundState(NamedTuple):
+    """``RoundState`` extended with the event clock. ``params``/``rng``/
+    ``round`` keep their synchronous meaning (``round`` counts *events*),
+    so checkpointing and schedule indexing work unchanged."""
+
+    params: Pytree        # stacked client copies, leaves [m, ...]
+    rng: jax.Array        # model-randomness chain (same as RoundState.rng)
+    round: jnp.ndarray    # int32 event counter
+    clock: jnp.ndarray    # f32 scalar — virtual time of the last event
+    next_ready: jax.Array  # [m] f32 — the event queue: per-client finish times
+    version: jax.Array    # [m] int32 — completed local rounds (staleness base)
+    clock_rng: jax.Array  # duration-randomness chain, independent of `rng`
+
+
+def init_async_state(params_stacked: Pytree, key: jax.Array,
+                     speed: SpeedModel) -> AsyncRoundState:
+    """``key`` seeds the MODEL chain exactly like ``init_round_state`` (so
+    a constant-speed async run is bit-identical to the sync run seeded
+    with the same key); the clock chain is derived by salting it."""
+    m = jax.tree.leaves(params_stacked)[0].shape[0]
+    k_dur, clock_rng = jax.random.split(
+        jax.random.fold_in(key, _CLOCK_SALT))
+    return AsyncRoundState(
+        params=params_stacked, rng=key,
+        round=jnp.zeros((), jnp.int32),
+        clock=jnp.zeros((), jnp.float32),
+        next_ready=speed.draw(k_dur, m),
+        version=jnp.zeros((m,), jnp.int32),
+        clock_rng=clock_rng)
+
+
+def _discount(s, cfg: AsyncConfig):
+    rho = (1.0 / (1.0 + s.astype(jnp.float32)) if cfg.discount == "inverse"
+           else jnp.power(cfg.gamma, s.astype(jnp.float32)))
+    return jnp.where(s <= cfg.max_staleness, rho, 0.0)
+
+
+def staleness_weights(W, version, ready, cfg: AsyncConfig) -> jnp.ndarray:
+    """Staleness-reweighted event matrix ``W_eff`` from a base mixing
+    matrix ``W`` (possibly traced).
+
+    For each READY row i, off-diagonal weight on neighbor j becomes
+    ``W[i,j] * rho(s_ij)`` with ``s_ij = max(version[i] - version[j], 0)``
+    (how many local rounds j lags i); the removed mass is folded back into
+    the self weight, so the row still sums to 1 with non-negative entries
+    whenever ``W``'s row did. Non-ready rows become ``e_i`` (busy clients
+    hold their parameters). When no neighbor is stale (``rho == 1``
+    everywhere) the computation is the identity ``W - 0 + diag(0)`` — the
+    constant-speed path stays bit-identical to the synchronous mixer.
+
+    The result is row-stochastic but NOT symmetric: the staleness pattern
+    breaks Definition 1's symmetry, which is inherent to asynchrony (the
+    property tests pin row-stochasticity + support containment instead).
+    """
+    Wj = jnp.asarray(W, jnp.float32)
+    m = Wj.shape[0]
+    eye = jnp.eye(m, dtype=jnp.float32)
+    s = jnp.maximum(version[:, None] - version[None, :], 0)
+    removed = Wj * (1.0 - eye) * (1.0 - _discount(s, cfg))
+    W_eff = Wj - removed + jnp.diag(removed.sum(axis=1))
+    ready = jnp.asarray(ready, jnp.float32)
+    return jnp.where(ready[:, None] > 0, W_eff, eye)
+
+
+def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
+                          spec: MixingSpec | TopologySchedule,
+                          async_cfg: AsyncConfig,
+                          mesh=None, client_axes: Sequence[str] = (),
+                          param_specs: Pytree | None = None,
+                          fused_update=None,
+                          with_metrics: bool = True) -> Callable:
+    """Build event_step(state: AsyncRoundState, batches) -> (state',
+    metrics) — ONE event of the asynchronous engine (the unit
+    :func:`make_async_engine` scans over; also the drop-in round step
+    ``make_round_step(..., async_cfg=...)`` returns).
+
+    ``batches`` keeps the synchronous layout (leaves [m, K, ...]): the
+    simulation trains every client's lane each event and the event's
+    ready mask selects whose fresh ``z`` enters the mix — busy clients'
+    lanes are discarded exactly like the synchronous partial-participation
+    path (their published params, which only ever change at their OWN
+    events, are what neighbors read — so training at the finish event is
+    equivalent to having trained over the whole busy interval).
+
+    ``spec`` may be a static :class:`MixingSpec` or any non-stateful
+    :class:`TopologySchedule` (the event index drives the schedule, and
+    the schedule's active mask composes with the clock's ready mask).
+    """
+    scheduled = isinstance(spec, TopologySchedule)
+    if scheduled and spec.is_stateful:
+        raise ValueError("async gossip needs a data-independent schedule; "
+                         "use random_walk(stateful=False) whose path does "
+                         "not depend on the event clock")
+    m = spec.m
+    mcfg = cfg.mixer_config()
+    impl = mcfg.resolved_impl(spec, mesh, client_axes)
+    plan = spec.gossip_plan() if impl in ("ring", "torus", "sparse") else None
+    ev = make_event_mixer(m, quant=mcfg.quant, mesh=mesh,
+                          client_axes=client_axes, param_specs=param_specs,
+                          plan=plan, wire=mcfg.wire, gate=True)
+    W_static = None if scheduled else jnp.asarray(spec.W, jnp.float32)
+
+    def event_step(state: AsyncRoundState, batches: Pytree):
+        key_round, key_mix, key_next = jax.random.split(state.rng, 3)
+        client_keys = jax.random.split(key_round, m)
+
+        t_now, ready = next_event(state.next_ready)
+
+        train_one = lambda p, b, k: local_train(
+            loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
+            fused_update=fused_update)
+        z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
+
+        if scheduled:
+            W_t, active, key_q = spec.round_event(key_mix, state.round)
+            ready_eff = ready * active
+        else:
+            W_t, key_q = W_static, key_mix
+            ready_eff = ready
+
+        version_next = state.version + ready_eff.astype(jnp.int32)
+        W_eff = staleness_weights(W_t, version_next, ready_eff, async_cfg)
+        x_next = ev(state.params, z, W_eff, ready_eff, key_q)
+
+        k_dur, clock_rng = jax.random.split(state.clock_rng)
+        durations = async_cfg.speed.draw(k_dur, m)
+        next_ready = jnp.where(ready > 0, t_now + durations,
+                               state.next_ready)
+
+        # Loss over the clients whose clocks fired (>= 1 by construction);
+        # NOT ready_eff, which can be all-zero when the only finisher is
+        # schedule-inactive — 0/1 would print as a spurious perfect loss.
+        metrics = {
+            "loss": jnp.sum(losses * ready) / ready.sum(),
+            "clock": t_now,
+            "ready_frac": jnp.mean(ready_eff),
+            "live_edges": jnp.sum(
+                (W_eff * (1.0 - jnp.eye(m, dtype=jnp.float32))) != 0.0),
+        }
+        if with_metrics:
+            lag = version_next.max() - version_next
+            metrics["mean_staleness"] = jnp.mean(lag.astype(jnp.float32))
+            metrics["max_staleness"] = lag.max()
+            metrics["consensus_dist"] = consensus_distance(x_next)
+        new_state = AsyncRoundState(
+            params=x_next, rng=key_next, round=state.round + 1,
+            clock=t_now, next_ready=next_ready, version=version_next,
+            clock_rng=clock_rng)
+        return new_state, metrics
+
+    return event_step
+
+
+def make_async_engine(loss_fn: LossFn, cfg: DFedAvgMConfig,
+                      spec: MixingSpec | TopologySchedule,
+                      async_cfg: AsyncConfig,
+                      mesh=None, client_axes: Sequence[str] = (),
+                      param_specs: Pytree | None = None,
+                      fused_update=None,
+                      with_metrics: bool = True) -> Callable:
+    """The whole event queue in one graph: run(state, batches) scans
+    :func:`make_async_round_step` over a leading EVENT axis (``batches``
+    leaves [n_events, m, K, ...]) and returns (state', metrics) with every
+    metric stacked [n_events]. XLA sees a single ``lax.scan`` — one
+    compiled while-loop regardless of how many events are processed."""
+    step = make_async_round_step(loss_fn, cfg, spec, async_cfg, mesh=mesh,
+                                 client_axes=client_axes,
+                                 param_specs=param_specs,
+                                 fused_update=fused_update,
+                                 with_metrics=with_metrics)
+
+    def run(state: AsyncRoundState, batches: Pytree):
+        return jax.lax.scan(step, state, batches)
+
+    return run

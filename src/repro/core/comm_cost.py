@@ -21,7 +21,7 @@ from .quantize import QuantConfig, message_bits
 from .topology import Graph, MixingSpec, TopologySchedule
 
 __all__ = ["dfedavgm_round_bits", "fedavg_round_bits", "dsgd_round_bits",
-           "schedule_round_bits", "plan_round_bits",
+           "schedule_round_bits", "plan_round_bits", "async_event_bits",
            "prop3_quantization_wins", "prop3_epsilon_floor", "CommLedger"]
 
 
@@ -42,7 +42,8 @@ def schedule_round_bits(schedule: TopologySchedule, d: int,
 
 
 def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
-                    count_lemma5_replicas: bool = False) -> float:
+                    count_lemma5_replicas: bool = False,
+                    t: int | None = None) -> float:
     """REALIZED wire accounting for the sparse backend: one round of a
     compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
     ``message_bits`` across every directed *plan* edge — a static
@@ -51,16 +52,44 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
     :func:`schedule_round_bits`, which bills the *expected* live edge set
     the dense path would need to touch.
 
+    ``plan`` may also be a SEQUENCE of plans — the dynamic per-member
+    plans of a cycle schedule (``TopologySchedule.gossip_plans``), where
+    round ``t`` only moves member ``t mod n``'s wire edges: pass ``t`` for
+    that round's exact bill, or leave it None for the per-round average.
+
     ``count_lemma5_replicas``: the ``lemma5`` quantized recursion also
     ships each neighbor's 32-bit replica row alongside the packed words
     on a TPU mesh (a real edge network would keep neighbor replicas
     instead); True adds those 32*d bits per edge to the bill.
     """
+    if isinstance(plan, (list, tuple)):
+        plans = list(plan)
+        if t is not None:
+            plans = [plans[int(t) % len(plans)]]
+        return sum(plan_round_bits(p, d, quant, count_lemma5_replicas)
+                   for p in plans) / len(plans)
     qc = quant if quant is not None else QuantConfig(bits=32)
     per_edge = message_bits(d, qc)
     if count_lemma5_replicas and qc.enabled and qc.delta_mode == "lemma5":
         per_edge += 32 * d
     return per_edge * plan.num_directed_wire_edges
+
+
+def async_event_bits(d: int, quant: QuantConfig | None = None,
+                     live_edges: float | None = None, plan=None) -> float:
+    """Bits ONE asynchronous event moves. Dense backend: only the event's
+    realized live directed edges carry a message — pass the engine's
+    ``live_edges`` metric (nonzero off-diagonal entries of the staleness-
+    reweighted ``W_eff``). Sparse backend: the masked-ppermute wire moves
+    the full plan schedule every event regardless of the mask — pass the
+    compiled ``plan`` and the bill matches :func:`plan_round_bits`."""
+    if plan is not None:
+        return plan_round_bits(plan, d, quant)
+    if live_edges is None:
+        raise ValueError("async_event_bits needs live_edges (dense "
+                         "backend) or plan (sparse backend)")
+    qc = quant if quant is not None else QuantConfig(bits=32)
+    return message_bits(d, qc) * float(live_edges)
 
 
 def dsgd_round_bits(graph: Graph, d: int) -> int:
@@ -106,13 +135,15 @@ class CommLedger:
 
     bits_per_round: float
     rounds: int = 0
+    extra_bits: float = 0.0   # variable per-event bills (async engine)
 
     @staticmethod
     def for_dfedavgm(spec: MixingSpec | TopologySchedule, d: int,
                      quant: QuantConfig | None, plan=None) -> "CommLedger":
         """``plan`` switches from expectation-based billing to the sparse
         backend's realized-plan-edge billing (pass the compiled
-        GossipPlan when the mixer runs sparse)."""
+        GossipPlan — or a cycle's list of per-member plans — when the
+        mixer runs sparse)."""
         if plan is not None:
             return CommLedger(plan_round_bits(plan, d, quant))
         if isinstance(spec, TopologySchedule):
@@ -130,9 +161,14 @@ class CommLedger:
     def tick(self, n: int = 1) -> None:
         self.rounds += n
 
+    def add_bits(self, bits: float) -> None:
+        """Bill a variable-size event (async engine: realized bytes differ
+        event to event with the live edge set)."""
+        self.extra_bits += float(bits)
+
     @property
     def total_bits(self) -> int:
-        return self.bits_per_round * self.rounds
+        return self.bits_per_round * self.rounds + self.extra_bits
 
     @property
     def total_megabytes(self) -> float:

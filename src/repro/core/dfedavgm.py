@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from .local_sgd import local_train
-from .mixing import MixerConfig, consensus_distance, make_mixer
+from .mixing import (MixerConfig, consensus_distance, make_event_mixer,
+                     make_mixer)
 from .quantize import QuantConfig, message_bits
 from .topology import MixingSpec, TopologySchedule
 
@@ -59,11 +60,18 @@ class RoundState(NamedTuple):
     params: Pytree       # stacked client copies, leaves [m, ...]
     rng: jax.Array       # round-level key
     round: jnp.ndarray   # int32 counter
+    # In-graph schedule state: the random-walk token position for stateful
+    # random_walk schedules (None otherwise — an empty pytree leaf, so
+    # checkpoints and existing callers are unaffected).
+    token: jax.Array | None = None
 
 
-def init_round_state(params_stacked: Pytree, key: jax.Array) -> RoundState:
+def init_round_state(params_stacked: Pytree, key: jax.Array,
+                     token: jax.Array | None = None) -> RoundState:
+    """``token``: pass ``schedule.init_token()`` for a stateful
+    random-walk schedule; leave None for every other topology."""
     return RoundState(params=params_stacked, rng=key,
-                      round=jnp.zeros((), jnp.int32))
+                      round=jnp.zeros((), jnp.int32), token=token)
 
 
 def average_params(stacked: Pytree) -> Pytree:
@@ -78,7 +86,9 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                     mesh=None, client_axes: Sequence[str] = (),
                     param_specs: Pytree | None = None,
                     fused_update=None,
-                    with_metrics: bool = True) -> Callable:
+                    with_metrics: bool = True,
+                    skip_inactive_compute: bool | str = "auto",
+                    async_cfg=None) -> Callable:
     """Build round_step(state, batches) -> (state', metrics).
 
     ``batches``: pytree with leaves [m, K, ...] — K minibatches per client
@@ -89,14 +99,63 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     :class:`TopologySchedule`; with a schedule the round counter picks the
     mixing event W_t, inactive clients' parameters are held exactly, and
     metrics gain ``active_frac`` (the realized participation rate). A
-    constant schedule is bit-identical to the static dense mixer. Note the
-    local-SGD vmap still *computes* updates for inactive clients (their
-    result is gated out); skipping their compute is a scheduler follow-up.
+    constant schedule is bit-identical to the static dense mixer.
+
+    ``skip_inactive_compute``: schedules with a *statically known* active
+    count per round (``partial(..., exact=True)`` cohorts, random walks:
+    exactly 2) gather just the active lanes, run the local-SGD vmap on a
+    [k, ...] stack, and scatter the results back — inactive clients'
+    compute is actually SKIPPED, not computed-and-gated (k/m of the
+    local-SGD FLOPs, visible in the lowered HLO). "auto" enables this
+    whenever the count is static; True insists (raising if it cannot be
+    known); False keeps the full-width vmap. Parameters and the ``loss``
+    metric are identical either way; ``local_drift`` is computed over the
+    *effective* z (inactive lanes hold x), so with skip off it instead
+    includes the discarded updates of inactive lanes.
+
+    ``async_cfg``: an :class:`~repro.core.async_gossip.AsyncConfig` swaps
+    the synchronous barrier for the event-driven asynchronous engine —
+    the returned step consumes an ``AsyncRoundState`` (see
+    ``async_gossip.make_async_round_step``, which this delegates to).
+
+    Stateful schedules (``random_walk(stateful=True)``) thread their token
+    position through ``RoundState.token``: seed it with
+    ``init_round_state(..., token=spec.init_token())``.
     """
+    if async_cfg is not None:
+        from .async_gossip import make_async_round_step
+        return make_async_round_step(
+            loss_fn, cfg, spec, async_cfg, mesh=mesh,
+            client_axes=client_axes, param_specs=param_specs,
+            fused_update=fused_update, with_metrics=with_metrics)
+
     scheduled = isinstance(spec, TopologySchedule)
-    mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
-                       client_axes=client_axes, param_specs=param_specs)
+    stateful = scheduled and spec.is_stateful
     m = spec.m
+
+    k_active = spec.static_active_count if scheduled else None
+    if skip_inactive_compute == "auto":
+        skip = k_active is not None and k_active < m
+    else:
+        skip = bool(skip_inactive_compute)
+        if skip and k_active is None:
+            raise ValueError(
+                "skip_inactive_compute=True needs a schedule with a "
+                "statically known per-round active count "
+                "(partial(..., exact=True) or random_walk); got "
+                f"{getattr(spec, 'name', spec)!r}")
+        skip = skip and k_active < m
+
+    if stateful:
+        mcfg = cfg.mixer_config()
+        impl = mcfg.resolved_impl(spec, mesh, client_axes)
+        plan = spec.gossip_plan() if impl == "sparse" else None
+        event_mixer = make_event_mixer(
+            m, quant=mcfg.quant, mesh=mesh, client_axes=client_axes,
+            param_specs=param_specs, plan=plan, wire=mcfg.wire, gate=True)
+    else:
+        mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
+                           client_axes=client_axes, param_specs=param_specs)
 
     def round_step(state: RoundState, batches: Pytree):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
@@ -105,22 +164,65 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         train_one = lambda p, b, k: local_train(
             loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
             fused_update=fused_update)
-        z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
 
-        metrics = {"loss": jnp.mean(losses)}
+        # Resolve the mixing event FIRST when the active mask must gate
+        # compute (stateful walks carry it; skip-compute needs it). The
+        # non-stateful mixer re-derives the identical event from the same
+        # key_mix, so sampling here is not a second draw.
+        token_next = state.token
+        active = None
+        if stateful:
+            if state.token is None:
+                raise ValueError(
+                    "stateful schedule: seed the walk with "
+                    "init_round_state(..., token=spec.init_token())")
+            W_t, active, key_q, token_next = spec.token_event(key_mix,
+                                                              state.token)
+        elif skip:
+            _, active, _ = spec.round_event(key_mix, state.round)
+
+        if skip:
+            idx = jnp.nonzero(active, size=k_active, fill_value=0)[0]
+            z_sub, losses = jax.vmap(train_one)(
+                jax.tree.map(lambda p: p[idx], state.params),
+                jax.tree.map(lambda b: b[idx], batches),
+                client_keys[idx])
+            # Inactive lanes never trained: their z IS their held x.
+            z = jax.tree.map(lambda xl, zl: xl.at[idx].set(zl),
+                             state.params, z_sub)
+        else:
+            z, losses = jax.vmap(train_one)(state.params, batches,
+                                            client_keys)
+
         # The round counter is passed to EVERY mixer uniformly; static
         # impls ignore it, schedules use it to pick the mixing event.
-        if scheduled:
+        metrics = {}
+        if stateful:
+            x_next = event_mixer(state.params, z, W_t, active, key_q)
+            if with_metrics:
+                metrics["active_frac"] = jnp.mean(active)
+        elif scheduled:
             x_next, active = mixer(state.params, z, key_mix, state.round)
             if with_metrics:
                 metrics["active_frac"] = jnp.mean(active)
         else:
             x_next = mixer(state.params, z, key_mix, state.round)
+        # "loss" is the mean over clients that PARTICIPATED this round —
+        # inactive clients' lanes are either skipped (gathered path) or
+        # discarded, so averaging them in would mix in training that never
+        # entered the model. Identical whether compute-skip is on or off.
+        if skip:
+            metrics["loss"] = jnp.mean(losses)   # exactly the active lanes
+        elif scheduled and spec.gates_participation:
+            metrics["loss"] = (jnp.sum(losses * active)
+                               / jnp.maximum(active.sum(), 1.0))
+        else:
+            metrics["loss"] = jnp.mean(losses)
         if with_metrics:
             metrics["consensus_dist"] = consensus_distance(x_next)
             metrics["local_drift"] = consensus_distance(z)
         new_state = RoundState(params=x_next, rng=key_next,
-                               round=state.round + 1)
+                               round=state.round + 1, token=token_next)
         return new_state, metrics
 
     return round_step

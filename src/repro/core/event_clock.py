@@ -1,0 +1,129 @@
+"""Virtual event clocks for asynchronous gossip (beyond-paper subsystem).
+
+The synchronous DFedAvgM round barrier assumes every client takes the same
+wall-clock time per local round. Real federated fleets are heterogeneous:
+compute durations vary per client and per round, and a handful of
+stragglers dominate the barrier (the round takes as long as the SLOWEST
+client). This module provides the *clock* half of the async engine:
+
+  * :class:`SpeedModel` — a pluggable per-client compute-duration
+    distribution (``constant`` / ``lognormal`` / ``straggler``), sampled
+    in-graph from a PRNG key so the whole event loop stays jittable.
+  * :func:`next_event` — pop the global event queue: the next virtual time
+    at which at least one client finishes its local SGD, plus the mask of
+    clients finishing at that instant.
+
+The event queue is just the vector of per-client next-ready times carried
+in :class:`~repro.core.async_gossip.AsyncRoundState`; "popping" it is an
+argmin, so a ``lax.scan`` over events needs no host-side priority queue.
+
+Units are arbitrary virtual seconds (only ratios matter); ``constant``
+speed makes every client finish simultaneously every event, which is how
+the async engine degenerates to the synchronous barrier bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SpeedModel", "next_event"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedModel:
+    """Per-client compute-duration distribution, drawn once per local round.
+
+    kinds:
+      * ``constant``  — every client takes exactly ``mean`` (the degenerate
+                        clock: async == sync barrier, used by equivalence
+                        tests).
+      * ``lognormal`` — mean-preserving lognormal jitter:
+                        ``mean * exp(sigma * xi - sigma^2 / 2)`` with
+                        ``xi ~ N(0,1)`` i.i.d. per client per round.
+      * ``straggler`` — lognormal base, but a fixed fraction of clients
+                        (the first ``ceil(straggler_frac * m)`` indices —
+                        deterministic, so runs are reproducible) are slower
+                        by ``straggler_factor``: the heavy-tail regime
+                        where dropping the barrier pays.
+    """
+
+    kind: str = "constant"          # constant | lognormal | straggler
+    mean: float = 1.0               # mean duration, virtual seconds
+    sigma: float = 0.5              # lognormal log-std
+    straggler_frac: float = 0.125   # fraction of clients that straggle
+    straggler_factor: float = 10.0  # their duration multiplier
+
+    _KINDS = ("constant", "lognormal", "straggler")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown speed model kind {self.kind!r}; "
+                             f"allowed: {' | '.join(self._KINDS)}")
+        if self.mean <= 0:
+            raise ValueError("speed model needs mean > 0")
+        if self.sigma < 0:
+            raise ValueError("speed model needs sigma >= 0")
+        if not 0.0 < self.straggler_frac <= 1.0:
+            raise ValueError("need 0 < straggler_frac <= 1")
+        if self.straggler_factor < 1.0:
+            raise ValueError("straggler_factor must be >= 1")
+
+    # -- static per-client structure ---------------------------------------
+
+    @property
+    def is_constant(self) -> bool:
+        return self.kind == "constant"
+
+    def n_stragglers(self, m: int) -> int:
+        if self.kind != "straggler":
+            return 0
+        return max(1, math.ceil(self.straggler_frac * m))
+
+    def multipliers(self, m: int) -> np.ndarray:
+        """Static [m] per-client duration multiplier (1 everywhere except
+        the straggler set)."""
+        mult = np.ones((m,), np.float32)
+        mult[: self.n_stragglers(m)] = self.straggler_factor
+        return mult
+
+    # -- in-graph sampling -------------------------------------------------
+
+    def draw(self, key, m: int) -> jnp.ndarray:
+        """(key, m) -> [m] f32 durations for each client's next local
+        round. Jit-safe; ``constant`` consumes no randomness."""
+        if self.kind == "constant":
+            return jnp.full((m,), self.mean, jnp.float32)
+        xi = jax.random.normal(key, (m,), jnp.float32)
+        dur = self.mean * jnp.exp(self.sigma * xi - 0.5 * self.sigma ** 2)
+        return dur * jnp.asarray(self.multipliers(m))
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def constant(mean: float = 1.0) -> "SpeedModel":
+        return SpeedModel(kind="constant", mean=mean)
+
+    @staticmethod
+    def lognormal(mean: float = 1.0, sigma: float = 0.5) -> "SpeedModel":
+        return SpeedModel(kind="lognormal", mean=mean, sigma=sigma)
+
+    @staticmethod
+    def straggler(mean: float = 1.0, sigma: float = 0.5,
+                  frac: float = 0.125, factor: float = 10.0) -> "SpeedModel":
+        return SpeedModel(kind="straggler", mean=mean, sigma=sigma,
+                          straggler_frac=frac, straggler_factor=factor)
+
+
+def next_event(next_ready: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pop the event queue: ``(t_now, ready)`` where ``t_now`` is the
+    earliest next-ready time and ``ready`` the f32 mask of clients whose
+    clock hits exactly that instant (>= 1 client by construction; ALL
+    clients under a constant speed model, since their clocks never
+    diverge)."""
+    t_now = jnp.min(next_ready)
+    ready = (next_ready <= t_now).astype(jnp.float32)
+    return t_now, ready

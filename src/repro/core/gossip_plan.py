@@ -36,7 +36,8 @@ import dataclasses
 import numpy as np
 
 __all__ = ["GossipPlan", "plan_from_spec", "plan_from_support",
-           "ring_steps", "torus_steps", "matching_steps"]
+           "plan_from_matrix", "ring_steps", "torus_steps",
+           "matching_steps"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +241,23 @@ def plan_from_spec(spec) -> GossipPlan:
     w_steps = W[np.arange(m)[None, :], src].copy()
     w_steps[src == np.arange(m)[None, :]] = 0.0
     return GossipPlan(m=m, src=src, name=f"plan[{spec.graph.name}]",
+                      w_self=w_self, w_steps=w_steps)
+
+
+def plan_from_matrix(W: np.ndarray, name: str = "matrix") -> GossipPlan:
+    """Dense mixing matrix -> static plan over ITS OWN support (matchings)
+    with baked weights. This is how a cycle schedule compiles one plan per
+    member so that each round only moves its member's wire edges instead
+    of masking the union support (see ``TopologySchedule.gossip_plans``)."""
+    W = np.asarray(W, np.float64)
+    m = W.shape[0]
+    adj = (W - np.diag(np.diag(W))) != 0
+    src = matching_steps(adj)
+    _check_exact_cover(src, adj)
+    w_self = np.diag(W).copy()
+    w_steps = W[np.arange(m)[None, :], src].copy()
+    w_steps[src == np.arange(m)[None, :]] = 0.0
+    return GossipPlan(m=m, src=src, name=f"plan[{name}]",
                       w_self=w_self, w_steps=w_steps)
 
 

@@ -57,7 +57,8 @@ from .topology import MixingSpec, TopologySchedule
 Pytree = Any
 
 __all__ = ["MixerConfig", "make_mixer", "make_scheduled_mixer", "mix_dense",
-           "make_plan_mixer", "execute_plan_reference", "consensus_distance"]
+           "make_plan_mixer", "make_event_mixer", "execute_plan_reference",
+           "consensus_distance"]
 
 _IMPLS = ("auto", "dense", "ring", "torus", "sparse")
 _WIRES = ("auto", "seq", "planar")
@@ -397,6 +398,63 @@ def make_plan_mixer(plan: GossipPlan, mesh,
 
 
 # ---------------------------------------------------------------------------
+# Event mixer: one mixing event with an externally supplied W
+# ---------------------------------------------------------------------------
+
+def make_event_mixer(m: int, quant: QuantConfig | None = None, mesh=None,
+                     client_axes: Sequence[str] = ("clients",),
+                     param_specs: Pytree | None = None,
+                     plan: GossipPlan | None = None,
+                     wire: str = "auto", gate: bool = True) -> Callable:
+    """Build mix_event(x, z, W, active, key) -> x' for *externally sampled*
+    mixing events.
+
+    Unlike :func:`make_scheduled_mixer` (which derives ``W_t`` from a
+    round counter inside the mixer), the caller hands over the event's
+    (possibly traced) ``W`` [m, m] row-stochastic matrix and the ``active``
+    [m] participation mask each call. This is the layer both *stateful*
+    topologies (the in-graph random-walk token) and the asynchronous
+    gossip engine (staleness-reweighted ``W_eff``) inject their matrices
+    through.
+
+    Backend: ``plan=None`` runs the dense reference (einsum / quantized
+    dense recursion, any W); a :class:`GossipPlan` runs the sparse masked-
+    ppermute backend — ``W``'s off-diagonal support must lie inside the
+    plan's support graph (weights are *gathered* onto the fixed wire).
+    ``gate=False`` skips the inactive-client z gating (callers whose
+    events never sideline clients).
+    """
+    def z_gate(active, z, x):
+        if not gate:
+            return z
+
+        def per_leaf(zl, xl):
+            mask = active.reshape((-1,) + (1,) * (zl.ndim - 1))
+            return jnp.where(mask > 0, zl, xl)
+        return jax.tree.map(per_leaf, z, x)
+
+    if plan is not None:
+        if plan.m != m:
+            raise ValueError(f"plan has m={plan.m}, expected {m}")
+        ex = _make_sparse_exec(plan, mesh, client_axes, param_specs, quant,
+                               wire=wire)
+
+        def mix_event(x, z, W, active, key=None):
+            w_self, w_steps = plan.gather_weights(W)
+            return ex(x, z_gate(active, z, x), w_self, w_steps, key)
+
+        return mix_event
+
+    def mix_event(x, z, W, active, key=None):
+        z_eff = z_gate(active, z, x)
+        if quant is None or not quant.enabled:
+            return mix_dense(W, z_eff)
+        return _mix_dense_quantized(W, x, z_eff, quant, key)
+
+    return mix_event
+
+
+# ---------------------------------------------------------------------------
 # Scheduled mixer: time-varying W_t sampled per round, either backend
 # ---------------------------------------------------------------------------
 
@@ -436,35 +494,50 @@ def make_scheduled_mixer(schedule: TopologySchedule, cfg: MixerConfig,
     impl = cfg.resolved_impl(schedule, mesh, client_axes)
     quant = cfg.quant
 
-    def gate(active):
-        def per_leaf(zl, xl):
-            mask = active.reshape((-1,) + (1,) * (zl.ndim - 1))
-            return jnp.where(mask > 0, zl, xl)
-        return per_leaf
+    if impl == "sparse" and schedule.kind == "cycle":
+        return _make_cycle_switch_mixer(schedule, cfg, mesh, client_axes,
+                                        param_specs)
 
-    if impl == "sparse":
-        plan = schedule.gossip_plan()
-        ex = _make_sparse_exec(plan, mesh, client_axes, param_specs, quant,
-                               wire=cfg.wire)
-
-        def mixer(x: Pytree, z: Pytree, key: jax.Array, t
-                  ) -> tuple[Pytree, jnp.ndarray]:
-            W_t, active, key_q = schedule.round_event(key, t)
-            z_eff = (jax.tree.map(gate(active), z, x)
-                     if schedule.gates_participation else z)
-            w_self, w_steps = plan.gather_weights(W_t)
-            return ex(x, z_eff, w_self, w_steps, key_q), active
-
-        return mixer
+    plan = schedule.gossip_plan() if impl == "sparse" else None
+    ev = make_event_mixer(schedule.m, quant=quant, mesh=mesh,
+                          client_axes=client_axes, param_specs=param_specs,
+                          plan=plan, wire=cfg.wire,
+                          gate=schedule.gates_participation)
 
     def mixer(x: Pytree, z: Pytree, key: jax.Array, t
               ) -> tuple[Pytree, jnp.ndarray]:
         W_t, active, key_q = schedule.round_event(key, t)
-        z_eff = (jax.tree.map(gate(active), z, x)
-                 if schedule.gates_participation else z)
-        if quant is None or not quant.enabled:
-            return mix_dense(W_t, z_eff), active
-        return _mix_dense_quantized(W_t, x, z_eff, quant, key_q), active
+        return ev(x, z, W_t, active, key_q), active
+
+    return mixer
+
+
+def _make_cycle_switch_mixer(schedule: TopologySchedule, cfg: MixerConfig,
+                             mesh, client_axes: Sequence[str],
+                             param_specs: Pytree | None) -> Callable:
+    """Dynamic-plan sparse realization of a deterministic cycle: compile
+    one static :class:`GossipPlan` PER MEMBER and ``lax.switch`` on
+    ``t mod n`` between their shard_map bodies, so each round only moves
+    its own member's wire edges. The union-support plan used to ship every
+    member's edges every round and mask the off-cycle ones to weight 0 —
+    for members with disjoint supports that is strictly wasted wire
+    (see ``plan_round_bits`` with a plan list for the billing side)."""
+    plans = schedule.gossip_plans()
+    quant = cfg.quant
+    execs = [_make_sparse_exec(p, mesh, client_axes, param_specs, quant,
+                               wire=cfg.wire) for p in plans]
+    weights = [p.static_weights() for p in plans]
+    n = len(plans)
+    ones = jnp.ones((schedule.m,), jnp.float32)
+
+    def mixer(x: Pytree, z: Pytree, key: jax.Array, t
+              ) -> tuple[Pytree, jnp.ndarray]:
+        branches = [
+            (lambda ops, ex=ex, ws=ws: ex(ops[0], ops[1], ws[0], ws[1],
+                                          ops[2]))
+            for ex, ws in zip(execs, weights)]
+        idx = jnp.asarray(t, jnp.int32) % n
+        return jax.lax.switch(idx, branches, (x, z, key)), ones
 
     return mixer
 

@@ -361,13 +361,24 @@ class TopologySchedule:
                            links).
       * ``partial``      — each client participates i.i.d. with prob
                            ``p_active``; only edges between two active
-                           clients carry messages.
+                           clients carry messages. With ``exact=True``
+                           EXACTLY ``n_active = round(p_active * m)``
+                           clients are drawn per round (FedAvg-style fixed
+                           cohorts) — the static count lets the round step
+                           skip inactive clients' local-SGD compute
+                           entirely (see ``static_active_count``).
       * ``random_walk``  — a single gossip token walks the base graph; round
                            ``t`` pairwise-averages the token's current and
                            next node (random-walk DFedAvg, arXiv:2508.21286
-                           flavor). The walk path is precomputed host-side
-                           from ``seed`` (data-independent), so per-round
-                           lookup is O(1) in-graph.
+                           flavor). By default the walk path is precomputed
+                           host-side from ``seed`` (data-independent), so
+                           per-round lookup is O(1) in-graph. With
+                           ``stateful=True`` there is NO precomputed path:
+                           the token position is *training-loop state*
+                           (threaded through ``RoundState.token``) and each
+                           round samples the next neighbor in-graph — the
+                           walk can run forever and react to runtime
+                           signals.
       * ``cycle``        — deterministic cycle over a list of mixing
                            matrices (e.g. alternating ring/torus).
 
@@ -382,7 +393,10 @@ class TopologySchedule:
     adj: np.ndarray | None = None         # edge_sample / partial / random_walk
     p_edge: float = 1.0                   # edge_sample
     p_active: float = 1.0                 # partial
+    n_active: int | None = None           # partial(exact=True): cohort size
     walk: np.ndarray | None = None        # random_walk: [horizon+1] int32 path
+                                          #   (None = stateful in-graph token)
+    start: int = 0                        # random_walk(stateful): initial token
     Ws: np.ndarray | None = None          # cycle: [n, m, m] stacked matrices
 
     _KINDS = ("constant", "edge_sample", "partial", "random_walk", "cycle")
@@ -395,13 +409,34 @@ class TopologySchedule:
 
     @property
     def is_stochastic(self) -> bool:
-        """Whether sample_w consumes PRNG randomness each round."""
-        return self.kind in ("edge_sample", "partial")
+        """Whether sampling round t's event consumes PRNG randomness."""
+        return self.kind in ("edge_sample", "partial") or self.is_stateful
+
+    @property
+    def is_stateful(self) -> bool:
+        """Whether the schedule carries in-graph state across rounds (the
+        random-walk token position, threaded through ``RoundState.token``
+        by ``make_round_step``). Stateful schedules sample via
+        :meth:`token_event`, not :meth:`sample_w`."""
+        return self.kind == "random_walk" and self.walk is None
 
     @property
     def gates_participation(self) -> bool:
         """Whether some clients may sit a round out (mixer must gate z)."""
         return self.kind in ("partial", "random_walk")
+
+    @property
+    def static_active_count(self) -> int | None:
+        """Statically known number of participating clients per round, or
+        None when the count is random. A static count (< m) lets the round
+        step gather just the active lanes, run local SGD on a [k, ...]
+        stack, and scatter back — actually SKIPPING inactive clients'
+        compute instead of gating it out after the fact."""
+        if self.kind == "random_walk":
+            return 2
+        if self.kind == "partial" and self.n_active is not None:
+            return self.n_active
+        return None
 
     def expected_directed_edges(self, t: int | None = None) -> float:
         """E[#directed edges carrying a message in round t] — the quantity
@@ -420,6 +455,11 @@ class TopologySchedule:
         if self.kind == "edge_sample":
             return self.p_edge * base
         if self.kind == "partial":
+            if self.n_active is not None:
+                # exact cohorts: edge live iff both endpoints drawn into
+                # the size-k cohort (without replacement)
+                k, m = self.n_active, self.m
+                return k * (k - 1) / (m * (m - 1)) * base
             # an edge is live iff both endpoints drew active
             return self.p_active ** 2 * base
         return 2.0  # random_walk: one undirected edge per round
@@ -447,21 +487,62 @@ class TopologySchedule:
             return metropolis_weights_from_adjacency(keep), ones
         if self.kind == "partial":
             adj = jnp.asarray(self.adj, jnp.float32)
-            active = (jax.random.uniform(key, (m,))
-                      < self.p_active).astype(jnp.float32)
+            if self.n_active is not None:
+                cohort = jax.random.permutation(key, m)[: self.n_active]
+                active = (jnp.zeros((m,), jnp.float32)
+                          .at[cohort].set(1.0))
+            else:
+                active = (jax.random.uniform(key, (m,))
+                          < self.p_active).astype(jnp.float32)
             live = adj * active[:, None] * active[None, :]
             return metropolis_weights_from_adjacency(live), active
         # random_walk: token edge (pos[t], pos[t+1]) pairwise-averages
+        if self.is_stateful:
+            raise ValueError(
+                "stateful random_walk has no precomputed path: its token "
+                "position is training-loop state — sample via token_event "
+                "(make_round_step threads RoundState.token automatically)")
         t = jnp.asarray(t, jnp.int32)
         pos = jnp.asarray(self.walk, jnp.int32)
         horizon = pos.shape[0] - 1
         i = pos[t % horizon]
         j = pos[t % horizon + 1]
-        W = (jnp.eye(self.m, dtype=jnp.float32)
+        return self._token_pair_event(i, j)
+
+    def _token_pair_event(self, i, j):
+        """W_t and active mask for a pairwise average across edge (i, j)."""
+        import jax.numpy as jnp
+
+        m = self.m
+        W = (jnp.eye(m, dtype=jnp.float32)
              .at[i, i].add(-0.5).at[j, j].add(-0.5)
              .at[i, j].add(0.5).at[j, i].add(0.5))
         active = jnp.zeros((m,), jnp.float32).at[i].set(1.0).at[j].set(1.0)
         return W, active
+
+    # -- stateful (token-carrying) sampling --------------------------------
+
+    def init_token(self):
+        """Initial in-graph walk state for a stateful random walk."""
+        import jax.numpy as jnp
+
+        if not self.is_stateful:
+            raise ValueError(f"schedule {self.name!r} carries no token")
+        return jnp.asarray(self.start, jnp.int32)
+
+    def sample_w_token(self, key, token):
+        """(key, token) -> (W_t, active, token_next): one in-graph step of
+        the walk. The next position is drawn uniformly from the current
+        node's neighbors (the same chain the host-side precomputed path
+        samples — but as jittable training-loop state)."""
+        import jax
+        import jax.numpy as jnp
+
+        adj = jnp.asarray(self.adj, jnp.float32)
+        row = adj[token]
+        nxt = jax.random.choice(key, self.m, p=row / row.sum())
+        W, active = self._token_pair_event(token, nxt)
+        return W, active, jnp.asarray(nxt, jnp.int32)
 
     def support_graph(self) -> Graph:
         """The union of every edge ANY round of this schedule can sample —
@@ -484,18 +565,41 @@ class TopologySchedule:
         from .gossip_plan import plan_from_support
         return plan_from_support(self.support_graph(), name=self.name)
 
+    def gossip_plans(self) -> list:
+        """Dynamic per-round plans. For a ``cycle`` this compiles one
+        *static* plan per member matrix (its own support, baked weights),
+        so a round only moves its member's wire edges instead of masking
+        the whole union support — the sparse backend ``lax.switch``es
+        between them on ``t mod n``. Every other kind returns the single
+        union-support plan ``[self.gossip_plan()]``."""
+        if self.kind != "cycle":
+            return [self.gossip_plan()]
+        from .gossip_plan import plan_from_matrix
+        return [plan_from_matrix(W, name=f"{self.name}[{k}]")
+                for k, W in enumerate(self.Ws)]
+
+    def _split_mix_key(self, key_mix):
+        import jax
+
+        if self.is_stochastic:
+            return jax.random.split(key_mix)
+        return key_mix, key_mix
+
     def round_event(self, key_mix, t):
         """Derive round t's (W_t, active, key_quant) from the round-step's
         mixing key — the single source of truth for how the key is split,
         shared by the mixer, tests, and benchmarks."""
-        import jax
-
-        if self.is_stochastic:
-            key_topo, key_q = jax.random.split(key_mix)
-        else:
-            key_topo = key_q = key_mix
+        key_topo, key_q = self._split_mix_key(key_mix)
         W, active = self.sample_w(key_topo, t)
         return W, active, key_q
+
+    def token_event(self, key_mix, token):
+        """Stateful analogue of :meth:`round_event`: derive the round's
+        (W_t, active, key_quant, token_next) from the mixing key and the
+        carried token position."""
+        key_topo, key_q = self._split_mix_key(key_mix)
+        W, active, token_next = self.sample_w_token(key_topo, token)
+        return W, active, key_q, token_next
 
     # -- constructors -----------------------------------------------------
 
@@ -517,22 +621,42 @@ class TopologySchedule:
                                 p_edge=float(p_edge))
 
     @staticmethod
-    def partial(graph: Graph, p_active: float) -> "TopologySchedule":
+    def partial(graph: Graph, p_active: float,
+                exact: bool = False) -> "TopologySchedule":
+        """``exact=False``: each client participates i.i.d. w.p.
+        ``p_active``. ``exact=True``: exactly ``round(p_active * m)``
+        clients are drawn (without replacement) every round — a FedAvg-
+        style fixed cohort whose statically known size lets the round step
+        skip inactive clients' local-SGD compute."""
         if not 0.0 < p_active <= 1.0:
             raise ValueError("need 0 < p_active <= 1")
+        n_active = None
+        tag = f"p={p_active}"
+        if exact:
+            n_active = max(1, round(p_active * graph.m))
+            tag = f"k={n_active}"
         return TopologySchedule(kind="partial", m=graph.m,
-                                name=f"partial[{graph.name},p={p_active}]",
+                                name=f"partial[{graph.name},{tag}]",
                                 adj=graph.adj.astype(np.float64),
-                                p_active=float(p_active))
+                                p_active=float(p_active), n_active=n_active)
 
     @staticmethod
-    def random_walk(graph: Graph, horizon: int = 4096,
-                    seed: int = 0, start: int = 0) -> "TopologySchedule":
-        """Precompute a ``horizon``-step walk on ``graph``; round t gossips
-        across walk edge (pos[t], pos[t+1]). Wraps modulo horizon after
-        ``horizon`` rounds."""
+    def random_walk(graph: Graph, horizon: int = 4096, seed: int = 0,
+                    start: int = 0, stateful: bool = False
+                    ) -> "TopologySchedule":
+        """``stateful=False``: precompute a ``horizon``-step walk on
+        ``graph``; round t gossips across walk edge (pos[t], pos[t+1]),
+        wrapping modulo horizon. ``stateful=True``: no precomputed path —
+        the token position lives in ``RoundState.token`` and each round
+        samples the next neighbor in-graph (never wraps, jit-safe,
+        reactive to runtime state)."""
         if not graph.is_connected():
             raise ValueError("random walk needs a connected base graph")
+        if stateful:
+            return TopologySchedule(
+                kind="random_walk", m=graph.m,
+                name=f"random_walk[{graph.name},stateful]",
+                adj=graph.adj.astype(np.float64), start=int(start))
         rng = np.random.default_rng(seed)
         pos = np.empty(horizon + 1, dtype=np.int32)
         pos[0] = start

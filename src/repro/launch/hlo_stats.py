@@ -140,6 +140,16 @@ def collect_collectives(hlo_text: str) -> CollectiveStats:
     return stats
 
 
+def traced_flops(fn, *args) -> float:
+    """Scan-aware FLOP count of ``fn(*args)`` (args may be arrays or
+    ShapeDtypeStructs). Thin forwarding of ``cost_model.structural_costs``
+    so compute-skip assertions live next to the other HLO accounting —
+    e.g. gating inactive clients' local SGD out of the round step must
+    show up here as a ~k/m FLOP reduction."""
+    from .cost_model import structural_costs
+    return structural_costs(fn, *args).flops
+
+
 # ---------------------------------------------------------------------------
 # Loop-aware accounting: multiply while-body collectives by trip counts
 # ---------------------------------------------------------------------------

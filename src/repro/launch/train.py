@@ -18,9 +18,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, reduced as make_reduced
-from ..core import (CommLedger, DFedAvgMConfig, MixingSpec, QuantConfig,
-                    TopologySchedule, average_params, init_round_state,
-                    make_round_step, round_comm_bits)
+from ..core import (AsyncConfig, CommLedger, DFedAvgMConfig, MixingSpec,
+                    QuantConfig, SpeedModel, TopologySchedule,
+                    async_event_bits, average_params, init_async_state,
+                    init_round_state, make_round_step, round_comm_bits)
 from ..core.topology import erdos_renyi_graph, ring_graph, torus_graph
 from ..data.synthetic import lm_round_batches
 from ..models import model as M
@@ -40,12 +41,14 @@ def build_topology(args, m: int):
     if args.schedule == "partial":
         base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
                 if args.base_graph == "er" else ring_graph(m))
-        return TopologySchedule.partial(base, args.p_active)
+        return TopologySchedule.partial(base, args.p_active,
+                                        exact=args.exact_partial)
     if args.schedule == "random-walk":
         base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
                 if args.base_graph == "er" else ring_graph(m))
         return TopologySchedule.random_walk(base, horizon=max(args.rounds, 64),
-                                            seed=args.seed)
+                                            seed=args.seed,
+                                            stateful=args.stateful_walk)
     if args.schedule == "cycle":
         rows = next((r for r in range(int(m ** 0.5), 1, -1) if m % r == 0),
                     None)
@@ -87,6 +90,23 @@ def main(argv=None):
                     help="per-round client participation prob (partial)")
     ap.add_argument("--er-p", type=float, default=0.5,
                     help="ER base-graph edge density (--base-graph er)")
+    ap.add_argument("--exact-partial", action="store_true",
+                    help="partial schedule draws an EXACT cohort of "
+                         "round(p_active*m) clients; the static count lets "
+                         "the round step skip inactive clients' compute")
+    ap.add_argument("--stateful-walk", action="store_true",
+                    help="random-walk token as in-graph RoundState instead "
+                         "of a precomputed host-side path")
+    ap.add_argument("--async-gossip", action="store_true",
+                    help="drop the round barrier: event-driven async "
+                         "engine with staleness-aware mixing")
+    ap.add_argument("--speed-model", default="lognormal",
+                    choices=["constant", "lognormal", "straggler"],
+                    help="per-client compute-duration distribution "
+                         "(--async-gossip)")
+    ap.add_argument("--max-staleness", type=int, default=8,
+                    help="neighbors staler than this many local rounds "
+                         "get mixing weight 0 (--async-gossip)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="save RoundState every --ckpt-every rounds")
@@ -116,14 +136,21 @@ def main(argv=None):
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
                           local_steps=args.local_steps, quant=quant,
                           mixer_impl=impl)
-    plan = spec.gossip_plan() if impl == "sparse" else None
-    if isinstance(spec, TopologySchedule):
+    scheduled = isinstance(spec, TopologySchedule)
+    plan = None
+    if impl == "sparse":
+        # A cycle compiles one plan per member (lax.switch at run time);
+        # everything else one union-support plan.
+        plans = spec.gossip_plans() if scheduled else [spec.gossip_plan()]
+        plan = plans if len(plans) > 1 else plans[0]
+    if scheduled:
         print(f"topology schedule: {spec.name} "
               f"(E[directed edges/round] = {spec.expected_directed_edges():.1f})")
     if plan is not None:
-        print(f"mixer backend: sparse ({plan.name}: {plan.n_steps} ppermute "
-              f"steps, {plan.num_directed_wire_edges} realized wire edges "
-              f"per round)")
+        for p in (plan if isinstance(plan, list) else [plan]):
+            print(f"mixer backend: sparse ({p.name}: {p.n_steps} ppermute "
+                  f"steps, {p.num_directed_wire_edges} realized wire edges "
+                  f"per round)")
     else:
         print("mixer backend: dense (einsum reference)")
 
@@ -134,28 +161,55 @@ def main(argv=None):
         lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), params)
 
     loss = lambda p, b, r: M.loss_fn(p, cfg, b, r)
+    acfg = None
+    if args.async_gossip:
+        speed = {"constant": SpeedModel.constant(),
+                 "lognormal": SpeedModel.lognormal(),
+                 "straggler": SpeedModel.straggler()}[args.speed_model]
+        acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness)
+        print(f"async gossip: speed={args.speed_model} "
+              f"max_staleness={args.max_staleness} (rounds are EVENTS)")
     step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
-                                   client_axes=client_axes or ()))
-    state = init_round_state(stacked, k_state)
+                                   client_axes=client_axes or (),
+                                   async_cfg=acfg))
+    if acfg is not None:
+        state = init_async_state(stacked, k_state, acfg.speed)
+    else:
+        token = (spec.init_token()
+                 if scheduled and spec.is_stateful else None)
+        state = init_round_state(stacked, k_state, token=token)
 
     d = cfg.n_params()
     # Sparse backend: bill the plan's realized wire edges, not the
-    # schedule's expectation.
-    ledger = CommLedger(round_comm_bits(spec, d, quant, plan=plan))
+    # schedule's expectation. Async: realized bytes are billed per event
+    # below (the live edge set varies with readiness and staleness).
+    ledger = CommLedger(0.0 if acfg is not None
+                        else round_comm_bits(spec, d, quant, plan=plan))
+    # The async engine lowers cycles through the UNION plan (its event
+    # matrices are staleness-dependent), so bill that one.
+    bill_plan = spec.gossip_plan() if isinstance(plan, list) else plan
     t0 = time.time()
     for t in range(args.rounds):
         batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,
                                    batch=args.batch, seq=args.seq,
                                    vocab=cfg.vocab_size)
         state, metrics = step(state, batches)
-        ledger.tick()
+        if acfg is not None:
+            ledger.add_bits(async_event_bits(
+                d, quant, live_edges=float(metrics["live_edges"]),
+                plan=bill_plan))
+        else:
+            ledger.tick()
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
             from ..checkpoint import save_checkpoint
             save_checkpoint(args.ckpt_dir, t + 1, state)
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+            extra = (f"clock={float(state.clock):.2f} "
+                     f"ready={float(metrics['ready_frac']):.2f} "
+                     if acfg is not None else "")
             print(f"round {t:4d} loss={float(metrics['loss']):.4f} "
                   f"consensus={float(metrics['consensus_dist']):.3e} "
-                  f"comm={ledger.total_megabytes:.1f}MB "
+                  f"{extra}comm={ledger.total_megabytes:.1f}MB "
                   f"({time.time()-t0:.1f}s)")
     avg = average_params(state.params)
     print("done; consensus model leaves:", len(jax.tree.leaves(avg)))

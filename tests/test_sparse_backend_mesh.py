@@ -177,6 +177,130 @@ def test_planar_wire_kernels_in_sparse_body():
     assert "PLANAR_OK" in out
 
 
+def test_async_sparse_zero_delay_bit_identical_to_sync_sparse():
+    """The async engine's sparse lowering: under a constant speed model
+    the event step reproduces the synchronous sparse round step BIT FOR
+    BIT (fp32 and stochastic q8), and a straggler run stays equivalent to
+    the dense async reference."""
+    out = run_sub(_PRELUDE + """
+    from repro.core import (AsyncConfig, DFedAvgMConfig, SpeedModel,
+                            init_async_state, init_round_state,
+                            make_round_step)
+    loss_fn = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+    batches = {"c": jnp.broadcast_to(x[:, None], (M, 4, D))}
+    sched = TopologySchedule.edge_sample(ring_graph(M), 0.6)
+    acfg = AsyncConfig(speed=SpeedModel.constant())
+    for q in (None, QuantConfig(bits=8, stochastic=True)):
+        cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=q,
+                             mixer_impl="sparse")
+        ss = jax.jit(make_round_step(loss_fn, cfg, sched, mesh=mesh,
+                                     client_axes=("clients",)))
+        sa = jax.jit(make_round_step(loss_fn, cfg, sched, mesh=mesh,
+                                     client_axes=("clients",),
+                                     async_cfg=acfg))
+        s1 = init_round_state({"w": jnp.zeros((M, D))},
+                              jax.random.PRNGKey(7))
+        s2 = init_async_state({"w": jnp.zeros((M, D))},
+                              jax.random.PRNGKey(7), acfg.speed)
+        for _ in range(3):
+            s1, _ = ss(s1, batches)
+            s2, _ = sa(s2, batches)
+        assert np.array_equal(np.asarray(s1.params["w"]),
+                              np.asarray(s2.params["w"])), q
+        print("ASYNC_SPARSE_OK", "q8" if q else "fp32")
+    # stragglers: sparse and dense async agree (same W_eff, other backend)
+    acfg2 = AsyncConfig(speed=SpeedModel.straggler(factor=4.0),
+                        max_staleness=6)
+    cfg_s = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                           mixer_impl="sparse")
+    cfg_d = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                           mixer_impl="dense")
+    sa = jax.jit(make_round_step(loss_fn, cfg_s, sched, mesh=mesh,
+                                 client_axes=("clients",), async_cfg=acfg2))
+    sd = jax.jit(make_round_step(loss_fn, cfg_d, sched, async_cfg=acfg2))
+    s1 = init_async_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(3),
+                          acfg2.speed)
+    s2 = init_async_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(3),
+                          acfg2.speed)
+    for _ in range(10):
+        s1, m1 = sa(s1, batches)
+        s2, m2 = sd(s2, batches)
+    err = float(np.max(np.abs(np.asarray(s1.params["w"])
+                              - np.asarray(s2.params["w"]))))
+    assert err < 1e-5, err
+    assert float(m1["live_edges"]) == float(m2["live_edges"])
+    print("ASYNC_STRAGGLER_OK", err)
+    """)
+    assert out.count("ASYNC_SPARSE_OK") == 2
+    assert "ASYNC_STRAGGLER_OK" in out
+
+
+def test_cycle_switches_per_member_plans():
+    """Satellite: a cycle lowers to lax.switch over per-member plans —
+    each round runs only its member's ppermutes (the HLO carries a
+    conditional), and results still match the dense reference."""
+    out = run_sub(_PRELUDE + """
+    from repro.core.topology import Graph
+    def chain_from_order(order):
+        adj = np.zeros((M, M), bool)
+        for a, b in zip(order[:-1], order[1:]):
+            adj[a, b] = adj[b, a] = True
+        return Graph(adj)
+    # edge-disjoint members: the union plan would move BOTH wires per round
+    cyc = TopologySchedule.cycle(
+        [MixingSpec.dense(chain_from_order([0, 1, 2, 3, 4, 5, 6, 7])),
+         MixingSpec.dense(chain_from_order([1, 3, 0, 5, 2, 7, 4, 6]))])
+    for q in (None, QuantConfig(bits=8, stochastic=True)):
+        mx_s = make_mixer(cyc, MixerConfig(impl="sparse", quant=q),
+                          mesh=mesh, client_axes=("clients",))
+        mx_d = make_mixer(cyc, MixerConfig(impl="dense", quant=q))
+        for t in range(4):
+            key = jax.random.PRNGKey(11 * t)
+            a, _ = jax.jit(mx_s)({"w": x}, {"w": z}, key, t)
+            b, _ = jax.jit(mx_d)({"w": x}, {"w": z}, key, t)
+            err = float(jnp.max(jnp.abs(a["w"] - b["w"])))
+            assert err < 1e-5, (q, t, err)
+        print("CYCLE_EQ_OK", "q8" if q else "fp32")
+    mx = make_mixer(cyc, MixerConfig(impl="sparse"), mesh=mesh,
+                    client_axes=("clients",))
+    txt = jax.jit(mx).lower({"w": x}, {"w": z}, jax.random.PRNGKey(0),
+                            0).compile().as_text()
+    assert "conditional" in txt, "cycle did not lower to a branch switch"
+    print("CYCLE_SWITCH_OK")
+    """)
+    assert out.count("CYCLE_EQ_OK") == 2
+    assert "CYCLE_SWITCH_OK" in out
+
+
+def test_stateful_walk_sparse_matches_dense():
+    """Satellite: the in-graph random-walk token drives the sparse backend
+    identically to the dense reference (token state advances in lockstep)."""
+    out = run_sub(_PRELUDE + """
+    from repro.core import (DFedAvgMConfig, init_round_state,
+                            make_round_step)
+    sw = TopologySchedule.random_walk(ring_graph(M), stateful=True)
+    loss_fn = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+    batches = {"c": jnp.broadcast_to(x[:, None], (M, 4, D))}
+    def run(impl, msh):
+        cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                             mixer_impl=impl)
+        step = jax.jit(make_round_step(loss_fn, cfg, sw, mesh=msh,
+                                       client_axes=("clients",) if msh
+                                       else ()))
+        st = init_round_state({"w": jnp.zeros((M, D))},
+                              jax.random.PRNGKey(5), token=sw.init_token())
+        for _ in range(5):
+            st, mt = step(st, batches)
+        return np.asarray(st.params["w"]), int(st.token)
+    w_d, tok_d = run("dense", None)
+    w_s, tok_s = run("sparse", mesh)
+    assert tok_d == tok_s
+    assert np.array_equal(w_d, w_s)
+    print("STATEFUL_WALK_OK", tok_s)
+    """)
+    assert "STATEFUL_WALK_OK" in out
+
+
 def test_round_step_sparse_matches_dense_end_to_end():
     """Full DFedAvgM rounds (local SGD + scheduled gossip) agree between
     backends, and inactive clients still hold params exactly."""
