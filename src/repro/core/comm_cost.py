@@ -44,13 +44,19 @@ def schedule_round_bits(schedule: TopologySchedule, d: int,
 def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
                     count_lemma5_replicas: bool = False,
                     t: int | None = None) -> float:
-    """REALIZED wire accounting for the sparse backend: one round of a
+    """REALIZED wire diagnostic for the sparse backend: one round of a
     compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
     ``message_bits`` across every directed *plan* edge — a static
     O(degree) schedule, independent of how the round's ``W_t`` was
-    sampled (masked edges still carry wire words). Compare with
-    :func:`schedule_round_bits`, which bills the *expected* live edge set
-    the dense path would need to touch.
+    sampled (masked edges still carry wire words).
+
+    This measures the COLLECTIVE REALIZATION, not the algorithm's
+    communication cost: the ledger convention (``CommLedger`` /
+    ``round_comm_bits`` / ``async_event_bits``) is the paper's §3.2
+    live-directed-edge count, identical for both backends — see
+    :func:`schedule_round_bits`. Use this function (benchmarks do) to
+    compare the wire schedule a backend actually executes against that
+    algorithmic bill.
 
     ``plan`` may also be a SEQUENCE of plans — the dynamic per-member
     plans of a cycle schedule (``TopologySchedule.gossip_plans``), where
@@ -77,17 +83,20 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
 
 def async_event_bits(d: int, quant: QuantConfig | None = None,
                      live_edges: float | None = None, plan=None) -> float:
-    """Bits ONE asynchronous event moves. Dense backend: only the event's
-    realized live directed edges carry a message — pass the engine's
+    """Bits ONE asynchronous event bills: the event's realized live
+    directed edges each carry one message — pass the engine's
     ``live_edges`` metric (nonzero off-diagonal entries of the staleness-
-    reweighted ``W_eff``). Sparse backend: the masked-ppermute wire moves
-    the full plan schedule every event regardless of the mask — pass the
-    compiled ``plan`` and the bill matches :func:`plan_round_bits`."""
-    if plan is not None:
-        return plan_round_bits(plan, d, quant)
+    reweighted ``W_eff``). The bill is BACKEND-INDEPENDENT (the single
+    ledger convention): the sparse masked-ppermute realization moves its
+    full plan schedule every event, but masked edges carry algorithmically
+    void payloads — compare against :func:`plan_round_bits` for that
+    wire-level view. ``plan`` is accepted for call-site compatibility but
+    no longer switches to realized-plan-edge billing."""
+    del plan
     if live_edges is None:
-        raise ValueError("async_event_bits needs live_edges (dense "
-                         "backend) or plan (sparse backend)")
+        raise ValueError("async_event_bits needs the event's live_edges "
+                         "(realized live directed edge count; plan-based "
+                         "wire billing moved to plan_round_bits)")
     qc = quant if quant is not None else QuantConfig(bits=32)
     return message_bits(d, qc) * float(live_edges)
 
@@ -140,12 +149,14 @@ class CommLedger:
     @staticmethod
     def for_dfedavgm(spec: MixingSpec | TopologySchedule, d: int,
                      quant: QuantConfig | None, plan=None) -> "CommLedger":
-        """``plan`` switches from expectation-based billing to the sparse
-        backend's realized-plan-edge billing (pass the compiled
-        GossipPlan — or a cycle's list of per-member plans — when the
-        mixer runs sparse)."""
-        if plan is not None:
-            return CommLedger(plan_round_bits(plan, d, quant))
+        """Billing follows ONE convention for both mixer backends: the
+        paper's §3.2 live-directed-edge count (exact for static specs,
+        the expectation for sampled schedules). ``plan`` is accepted for
+        call-site compatibility but no longer switches the bill — the
+        sparse backend's wire realization (every plan edge, masked or
+        not) is a diagnostic, not a cost model; see
+        :func:`plan_round_bits`."""
+        del plan
         if isinstance(spec, TopologySchedule):
             return CommLedger(schedule_round_bits(spec, d, quant))
         return CommLedger(dfedavgm_round_bits(spec.graph, d, quant))

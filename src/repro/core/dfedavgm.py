@@ -44,6 +44,9 @@ class DFedAvgMConfig:
     mixer_impl: "auto" | "dense" | "ring" | "torus" | "sparse"
                 (see core.mixing.MixerConfig — "sparse" executes the
                 compiled GossipPlan as masked ppermutes)
+    wire:  flat wire-buffer codec backend for the sparse mixer — "auto"
+           (Pallas buffer kernels on TPU, XLA lowering elsewhere),
+           "planar" (force the kernels), "seq" (force the XLA lowering)
     """
 
     eta: float = 0.01
@@ -51,9 +54,11 @@ class DFedAvgMConfig:
     local_steps: int = 4
     quant: QuantConfig | None = None
     mixer_impl: str = "auto"
+    wire: str = "auto"
 
     def mixer_config(self) -> MixerConfig:
-        return MixerConfig(impl=self.mixer_impl, quant=self.quant)
+        return MixerConfig(impl=self.mixer_impl, quant=self.quant,
+                           wire=self.wire)
 
 
 class RoundState(NamedTuple):
@@ -101,17 +106,23 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     metrics gain ``active_frac`` (the realized participation rate). A
     constant schedule is bit-identical to the static dense mixer.
 
-    ``skip_inactive_compute``: schedules with a *statically known* active
-    count per round (``partial(..., exact=True)`` cohorts, random walks:
-    exactly 2) gather just the active lanes, run the local-SGD vmap on a
+    ``skip_inactive_compute``: schedules with a *statically bounded*
+    active count per round (``partial(..., exact=True)`` cohorts, random
+    walks: exactly 2, and i.i.d. ``partial(..., cap_slack=...)``: at most
+    the cap) gather just the active lanes, run the local-SGD vmap on a
     [k, ...] stack, and scatter the results back — inactive clients'
     compute is actually SKIPPED, not computed-and-gated (k/m of the
-    local-SGD FLOPs, visible in the lowered HLO). "auto" enables this
-    whenever the count is static; True insists (raising if it cannot be
-    known); False keeps the full-width vmap. Parameters and the ``loss``
-    metric are identical either way; ``local_drift`` is computed over the
-    *effective* z (inactive lanes hold x), so with skip off it instead
-    includes the discarded updates of inactive lanes.
+    local-SGD FLOPs, visible in the lowered HLO). When the bound is an
+    upper bound (capped i.i.d. participation) the gather is PADDED:
+    unused slots index out of bounds, train a clamped dummy lane, and are
+    dropped on scatter — exact whenever the round's active count fits the
+    cap, which the capped schedule guarantees by construction. "auto"
+    enables this whenever the count is statically bounded; True insists
+    (raising if it cannot be known); False keeps the full-width vmap.
+    Parameters and the ``loss`` metric are identical either way;
+    ``local_drift`` is computed over the *effective* z (inactive lanes
+    hold x), so with skip off it instead includes the discarded updates
+    of inactive lanes.
 
     ``async_cfg``: an :class:`~repro.core.async_gossip.AsyncConfig` swaps
     the synchronous barrier for the event-driven asynchronous engine —
@@ -141,8 +152,9 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         if skip and k_active is None:
             raise ValueError(
                 "skip_inactive_compute=True needs a schedule with a "
-                "statically known per-round active count "
-                "(partial(..., exact=True) or random_walk); got "
+                "statically bounded per-round active count "
+                "(partial(..., exact=True), partial(..., cap_slack=...) "
+                "or random_walk); got "
                 f"{getattr(spec, 'name', spec)!r}")
         skip = skip and k_active < m
 
@@ -182,14 +194,23 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             _, active, _ = spec.round_event(key_mix, state.round)
 
         if skip:
-            idx = jnp.nonzero(active, size=k_active, fill_value=0)[0]
+            # Padded upper-bound gather: unused slots fill with the
+            # out-of-bounds index m — their gathers clamp (training a
+            # throwaway copy of the last lane) and their scatters drop,
+            # so a round with fewer than k_active live clients stays
+            # exact. Cohorts/walks fill every slot; capped i.i.d.
+            # participation uses the slack.
+            idx = jnp.nonzero(active, size=k_active, fill_value=m)[0]
+            safe = jnp.minimum(idx, m - 1)
+            valid = (idx < m).astype(jnp.float32)
             z_sub, losses = jax.vmap(train_one)(
-                jax.tree.map(lambda p: p[idx], state.params),
-                jax.tree.map(lambda b: b[idx], batches),
-                client_keys[idx])
+                jax.tree.map(lambda p: p[safe], state.params),
+                jax.tree.map(lambda b: b[safe], batches),
+                client_keys[safe])
             # Inactive lanes never trained: their z IS their held x.
-            z = jax.tree.map(lambda xl, zl: xl.at[idx].set(zl),
-                             state.params, z_sub)
+            z = jax.tree.map(
+                lambda xl, zl: xl.at[idx].set(zl, mode="drop"),
+                state.params, z_sub)
         else:
             z, losses = jax.vmap(train_one)(state.params, batches,
                                             client_keys)
@@ -212,7 +233,10 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         # discarded, so averaging them in would mix in training that never
         # entered the model. Identical whether compute-skip is on or off.
         if skip:
-            metrics["loss"] = jnp.mean(losses)   # exactly the active lanes
+            # Mean over the VALID slots (== the active lanes; padded
+            # slots of a capped round trained a dummy and don't count).
+            metrics["loss"] = (jnp.sum(losses * valid)
+                               / jnp.maximum(valid.sum(), 1.0))
         elif scheduled and spec.gates_participation:
             metrics["loss"] = (jnp.sum(losses * active)
                                / jnp.maximum(active.sum(), 1.0))
@@ -235,16 +259,15 @@ def round_comm_bits(spec: MixingSpec | TopologySchedule, n_params: int,
     *participating* client sends its (possibly quantized) message across
     each *live* directed edge.
 
-    Static spec: exact integer count, as before. TopologySchedule: the
-    expectation over the round's sampled edge set (exact for deterministic
-    kinds — constant / cycle / random_walk — pass ``t`` to resolve a
-    specific round of a cycle). With a compiled ``plan`` (sparse backend)
-    the count switches from expectations to the plan's REALIZED wire
-    edges — what the masked-ppermute collective actually moves each round
-    (see :func:`repro.core.comm_cost.plan_round_bits`)."""
-    if plan is not None:
-        from .comm_cost import plan_round_bits
-        return plan_round_bits(plan, n_params, quant)
+    Static spec: exact integer count. TopologySchedule: the expectation
+    over the round's sampled edge set (exact for deterministic kinds —
+    constant / cycle / random_walk — pass ``t`` to resolve a specific
+    round of a cycle). The bill is the SAME for both mixer backends —
+    dense and sparse realize the identical algorithmic exchange, so
+    ``plan`` is accepted for call-site compatibility but no longer
+    switches to realized-plan-edge billing (that wire-level diagnostic is
+    :func:`repro.core.comm_cost.plan_round_bits`)."""
+    del plan
     if isinstance(spec, TopologySchedule):
         from .comm_cost import schedule_round_bits
         return schedule_round_bits(spec, n_params, quant, t)

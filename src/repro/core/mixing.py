@@ -25,13 +25,20 @@ lower through one plan/compile/execute pipeline:
 ``ring`` and ``torus`` impls are thin plan instances of the sparse
 backend (their shift decompositions map 1:1 onto ICI links).
 
-Quantized variants (Algorithm 2) transmit the *packed uint32 wire words*
-of ``Q(z - x)`` plus one f32 scale through the collective, so the compiled
-HLO actually moves b/32 of the bytes. Two wire codecs: ``seq`` (the
-``core.quantize`` packing — numerically identical to the dense reference,
-used on CPU and in tests) and ``planar`` (the Pallas
-``kernels.quantize_pack`` / ``kernels.dequant_mix`` lane-parallel format,
-fused decode+apply, selected automatically on TPU for ``eq7``).
+The sparse backend's hot loop runs on a FLAT WIRE BUFFER
+(:mod:`repro.core.wire_layout`): the model pytree is flattened once per
+round into a single lane-aligned planar array, so quantize/pack, each
+plan step's ``ppermute``, and the fused dequantize/mix run once per round
+on one contiguous buffer instead of once per leaf per step. Quantized
+variants (Algorithm 2) transmit the *packed uint32 wire words* of
+``Q(z - x)`` with the per-leaf f32 scales bitcast into the stream tail —
+ONE collective launch per plan step, and the compiled HLO actually moves
+b/32 of the bytes. The codec itself has two interchangeable backends
+behind ``MixerConfig.wire``: ``planar`` (the Pallas
+``kernels.quantize_pack`` / ``kernels.dequant_mix`` buffer kernels,
+auto-selected on TPU) and ``seq`` (a pure-XLA lowering of the identical
+math — the CPU default and the kernels' parity oracle: bit-identical
+wire words/scales, few-ulp fused output).
 """
 from __future__ import annotations
 
@@ -50,9 +57,9 @@ except AttributeError:  # jax < 0.5 keeps shard_map under experimental
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from .gossip_plan import GossipPlan
-from .quantize import (QuantConfig, dequantize_int, pack_bits, quantize_int,
-                       unpack_bits)
+from .quantize import QuantConfig, dequantize_int, quantize_int
 from .topology import MixingSpec, TopologySchedule
+from .wire_layout import WireLayout
 
 Pytree = Any
 
@@ -89,10 +96,13 @@ class MixerConfig:
            graphs, where the all-gather is optimal), else "dense".
     quant: None disables Algorithm 2; a QuantConfig moves packed uint32
            wire words through the collectives.
-    wire:  quantized-sparse wire codec — "seq" (core.quantize packing,
-           numerically identical to the dense reference), "planar"
-           (Pallas quantize_pack/dequant_mix fused kernels, eq7 only),
-           "auto" (planar on TPU, seq elsewhere).
+    wire:  quantized-sparse wire codec backend. Both run the same flat
+           wire-buffer path (one planar buffer per round, scales in the
+           stream tail, one ppermute per plan step) and produce
+           numerically identical results: "planar" executes the Pallas
+           buffer kernels (quantize_pack_buffer / dequant_mix_buffer,
+           interpret mode off-TPU), "seq" the pure-XLA lowering of the
+           same math, "auto" picks planar on TPU and seq elsewhere.
     """
 
     impl: str = "auto"
@@ -125,7 +135,9 @@ class MixerConfig:
         return "dense"
 
 
-def _planar_wire(wire: str) -> bool:
+def _pallas_wire(wire: str) -> bool:
+    """Whether the flat wire codec runs the Pallas buffer kernels (True)
+    or their pure-XLA oracle (False; the CPU default)."""
     if wire == "planar":
         return True
     if wire == "seq":
@@ -204,23 +216,91 @@ def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
     return jax.tree.unflatten(treedef, out)
 
 
-def execute_plan_reference(plan: GossipPlan, W, stacked: Pytree) -> Pytree:
+def _weighted_replica_base(xs, weights):
+    """The ``lemma5`` base ``sum_k w_k * x_k`` over the received f32
+    replica buffers: xs [..., K, per, W], weights [..., K]. Shared by the
+    mesh body and the mesh-free reference so both accumulate in the same
+    order (cross-module FMA contraction still allows ~1 ulp/term of
+    drift — see ``dequant_mix_buffer_ref``)."""
+    base = weights[..., 0, None, None] * xs[..., 0, :, :]
+    for j in range(1, xs.shape[-3]):
+        base = base + weights[..., j, None, None] * xs[..., j, :, :]
+    return base
+
+
+def execute_plan_reference(plan: GossipPlan, W, stacked: Pytree,
+                           x: Pytree | None = None,
+                           quant: QuantConfig | None = None,
+                           key: jax.Array | None = None) -> Pytree:
     """Mesh-free reference of the sparse backend's *math*: the same
     step/weight decomposition, with takes instead of ppermutes. Pins the
-    IR semantics to ``mix_dense`` in tests without needing devices."""
+    IR semantics to ``mix_dense`` in tests without needing devices.
+
+    With a ``quant`` config this is the SPEC of the flat wire path: the
+    identical planar layout, per-leaf scales, shared stochastic-rounding
+    key derivation, and accumulation order as the shard_map body — the
+    mesh WIRE (packed words + scales) must match it bit for bit, and the
+    fused float output to a few ulp (XLA's per-module FMA contraction is
+    the only slack; see ``kernels.ref.dequant_mix_buffer_ref``). ``x`` is
+    the held parameter state of eq. 7; ``key`` feeds stochastic rounding.
+    """
     w_self, w_steps = plan.gather_weights(W)
     src = jnp.asarray(plan.src)
+    live = [k for k in range(plan.n_steps) if plan.wire_pairs(k)]
 
-    def mx(z):
-        zf = z.astype(jnp.float32)
-        bshape = (-1,) + (1,) * (zf.ndim - 1)
-        acc = w_self.reshape(bshape) * zf
-        for k in range(plan.n_steps):
-            acc = acc + w_steps[k].reshape(bshape) * jnp.take(zf, src[k],
-                                                              axis=0)
-        return acc.astype(z.dtype)
+    if quant is None or not quant.enabled:
 
-    return jax.tree.map(mx, stacked)
+        def mx(z):
+            zf = z.astype(jnp.float32)
+            bshape = (-1,) + (1,) * (zf.ndim - 1)
+            acc = w_self.reshape(bshape) * zf
+            for k in live:
+                acc = acc + w_steps[k].reshape(bshape) * jnp.take(zf, src[k],
+                                                                  axis=0)
+            return acc.astype(z.dtype)
+
+        return jax.tree.map(mx, stacked)
+
+    # ---- quantized: the flat wire-buffer math, batched over clients ----
+    if x is None:
+        raise ValueError("quantized plan reference needs the held state x")
+    m = plan.m
+    layout = WireLayout.for_tree(jax.tree.map(lambda l: l[0], x),
+                                 bits=quant.bits)
+    X = layout.to_planar_stacked(x)              # [m, per, W]
+    # Leaf-dtype subtraction before the f32 cast, like the mesh body and
+    # the dense reference.
+    delta = layout.to_planar_stacked(jax.tree.map(
+        lambda zl, xl: zl - xl, stacked, x))
+    scales = layout.leaf_scales(delta, quant)    # [m, n_leaves]
+    leaf_keys = None
+    if quant.stochastic:
+        leaf_keys = _quant_leaf_keys(key, layout.n_leaves, m)
+    words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys)
+
+    ws = jnp.stack([w_self] + [w_steps[k] for k in live], axis=1)  # [m, K]
+    streams = jnp.stack(
+        [words] + [jnp.take(words, src[k], axis=0) for k in live], axis=1)
+    scs = jnp.stack(
+        [scales] + [jnp.take(scales, src[k], axis=0) for k in live], axis=1)
+    lemma5 = quant.delta_mode == "lemma5"
+    if lemma5:
+        base_in = jnp.stack(
+            [X] + [jnp.take(X, src[k], axis=0) for k in live], axis=1)
+    else:
+        base_in = X
+
+    # One client at a time (lax.map), so the decode runs at the SAME
+    # per-shard shapes as the mesh body — batching it over m would
+    # compile a differently-vectorized accumulation and break bitwise
+    # parity with the shard_map realization.
+    def decode_one(args):
+        s, sc, w, b = args
+        base = _weighted_replica_base(b, w) if lemma5 else b
+        return layout.decode_apply(base, s, sc, w, quant)
+
+    out = jax.lax.map(decode_one, (streams, scs, ws, base_in))
+    return layout.from_planar_stacked(out)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +328,14 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
     w_self [m] / w_steps [n_steps, m] may be traced (per-round gathers
     from a sampled W_t) or constants (static specs); weight 0 masks a
     plan edge out of the round while the wire schedule stays fixed.
+
+    The body runs on the FLAT WIRE BUFFER (``core.wire_layout``): the
+    client-local pytree is flattened once, every plan step ppermutes ONE
+    contiguous array for the whole model, and (when quantized) encode /
+    fused decode-apply each run once per round. Per-leaf scales ride the
+    u32 stream tail; the ``lemma5`` recursion additionally bitcasts the
+    f32 replica buffer into the same stream, so every mode stays at one
+    collective launch per plan step.
     """
     ca = tuple(client_axes)
     if not _one_client_per_shard(mesh, ca, plan.m):
@@ -256,24 +344,25 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
             f"has m={plan.m}, mesh axes {ca!r} don't multiply to it")
     axis = ca[0] if len(ca) == 1 else ca
     pairs = [plan.wire_pairs(k) for k in range(plan.n_steps)]
-    n_steps = plan.n_steps
+    live = [k for k in range(plan.n_steps) if pairs[k]]
     m = plan.m
     w_specs = (P(ca), P(None, ca))
+
+    def local(tree):
+        return jax.tree.map(lambda a: a[0], tree)
 
     if quant is None or not quant.enabled:
 
         def body(z_blocks, wself, wsteps):
-            def leaf(zb):
-                row = zb[0].astype(jnp.float32)
-                acc = wself[0] * row
-                for k in range(n_steps):
-                    if not pairs[k]:
-                        continue
-                    recv = jax.lax.ppermute(row, axis, pairs[k])
-                    acc = acc + wsteps[k, 0] * recv
-                return acc.astype(zb.dtype)[None]
-
-            return jax.tree.map(leaf, z_blocks)
+            zc = local(z_blocks)
+            layout = WireLayout.for_tree(zc)
+            row = layout.flatten_f32(zc)
+            acc = wself[0] * row
+            for k in live:
+                recv = jax.lax.ppermute(row, axis, pairs[k])
+                acc = acc + wsteps[k, 0] * recv
+            return jax.tree.map(lambda a: a[None],
+                                layout.unflatten(acc))
 
         def ex(x, z, wself, wsteps, key=None):
             del x, key
@@ -285,91 +374,65 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
 
         return ex
 
-    # ---- quantized: move packed words + scale through each ppermute ----
-    bits = quant.bits
+    # ---- quantized: one packed u32 stream (words | scales | lemma5
+    # replica) through ONE ppermute per plan step ----
     lemma5 = quant.delta_mode == "lemma5"
-    # planar kernels encode with the per-tensor max-abs scale and fuse the
-    # eq7 apply; lemma5 / fixed-scale fall back to the sequential codec.
-    planar_ok = not lemma5 and quant.scale_mode == "per_tensor"
-    if wire == "planar" and not planar_ok:
-        warnings.warn(
-            "wire='planar' supports only delta_mode='eq7' with "
-            "scale_mode='per_tensor'; falling back to the sequential "
-            f"codec for delta_mode={quant.delta_mode!r}, "
-            f"scale_mode={quant.scale_mode!r}", UserWarning, stacklevel=3)
-    planar = _planar_wire(wire) and planar_ok
+    pallas = _pallas_wire(wire)
 
-    def q_body(x_blocks, z_blocks, keys_tree, wself, wsteps):
-        def leaf(xb, zb, kb):
-            inner = xb.shape[1:]
-            n = int(np.prod(inner)) if inner else 1
-            xflat = xb.astype(jnp.float32).reshape(n)
-            delta = (zb - xb).astype(jnp.float32).reshape(n)
-            qkey = kb[0] if quant.stochastic else None
-
-            if planar:
-                from ..kernels.ops import decode_apply_plan, encode_delta
-                words, s = encode_delta(delta, bits,
-                                        stochastic=quant.stochastic,
-                                        key=qkey)
-                svec = s.reshape(1)
-                streams, scales, weights = [words], [svec], [wself]
-                for k in range(n_steps):
-                    if not pairs[k]:
-                        continue
-                    streams.append(jax.lax.ppermute(words, axis, pairs[k]))
-                    scales.append(jax.lax.ppermute(svec, axis, pairs[k]))
-                    weights.append(wsteps[k])
-                out = decode_apply_plan(
-                    xflat, jnp.stack(streams),
-                    jnp.concatenate(scales),
-                    jnp.concatenate([w.reshape(1) for w in weights]),
-                    bits=bits)
-                return out.reshape(xb.shape).astype(xb.dtype)
-
-            code, s = quantize_int(delta, quant, qkey)
-            words = pack_bits(code, bits)
-            svec = s.reshape(1)
-            deq_own = dequantize_int(code, s)
-            if lemma5:
-                acc = wself[0] * (xflat + deq_own)
-            else:
-                acc = xflat + wself[0] * deq_own
-            for k in range(n_steps):
-                if not pairs[k]:
-                    continue
-                rw = jax.lax.ppermute(words, axis, pairs[k])
-                rs = jax.lax.ppermute(svec, axis, pairs[k])
-                deq_r = dequantize_int(unpack_bits(rw, bits, n), rs[0])
-                if lemma5:
-                    rx = jax.lax.ppermute(xflat, axis, pairs[k])
-                    acc = acc + wsteps[k, 0] * (rx + deq_r)
-                else:
-                    acc = acc + wsteps[k, 0] * deq_r
-            return acc.reshape(xb.shape).astype(xb.dtype)
-
-        return jax.tree.map(leaf, x_blocks, z_blocks, keys_tree)
+    def q_body(x_blocks, z_blocks, keys_blk, wself, wsteps):
+        xc = local(x_blocks)
+        layout = WireLayout.for_tree(xc, bits=quant.bits)
+        nl, W = layout.n_leaves, layout.total_words
+        x2d = layout.to_planar(xc)
+        # Delta subtracts in the LEAF dtype before the f32 cast — the
+        # dense reference's (z - x).astype(f32) semantics (differs for
+        # bf16 params, where f32-cast-then-subtract would keep bits the
+        # wire is not supposed to see).
+        delta = layout.to_planar(jax.tree.map(
+            lambda zl, xl: zl - xl, local(z_blocks), xc))
+        scales = layout.leaf_scales(delta, quant)          # [n_leaves]
+        leaf_keys = keys_blk[0] if quant.stochastic else None
+        words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys,
+                              pallas=pallas)
+        tail = [jax.lax.bitcast_convert_type(scales, jnp.uint32)]
+        if lemma5:
+            tail.append(jax.lax.bitcast_convert_type(
+                x2d.reshape(-1), jnp.uint32))
+        stream = jnp.concatenate([words] + tail)
+        streams, wlist = [stream], [wself[0]]
+        for k in live:
+            streams.append(jax.lax.ppermute(stream, axis, pairs[k]))
+            wlist.append(wsteps[k, 0])
+        S = jnp.stack(streams)                             # [K, L] u32
+        weights = jnp.stack(wlist)                         # [K]
+        words_all = S[:, :W]
+        scales_all = jax.lax.bitcast_convert_type(
+            S[:, W:W + nl], jnp.float32)                   # [K, n_leaves]
+        if lemma5:
+            xs = jax.lax.bitcast_convert_type(
+                S[:, W + nl:], jnp.float32).reshape(-1, layout.per, W)
+            base = _weighted_replica_base(xs, weights)
+        else:
+            base = x2d
+        out2d = layout.decode_apply(base, words_all, scales_all, weights,
+                                    quant, pallas=pallas)
+        return jax.tree.map(lambda a: a[None], layout.from_planar(out2d))
 
     def ex(x, z, wself, wsteps, key):
         specs = _full_specs(x, ca, param_specs)
-        leaves, treedef = jax.tree.flatten(x)
-        n_leaves = len(leaves)
+        n_leaves = len(jax.tree.leaves(x))
         if quant.stochastic:
-            keys = _quant_leaf_keys(key, n_leaves, m)
-            per_leaf_keys = [keys[i] for i in range(n_leaves)]
+            keys = jnp.transpose(_quant_leaf_keys(key, n_leaves, m),
+                                 (1, 0, 2))                # [m, nl, 2]
         else:
-            dummy = jnp.zeros((m, 2), jnp.uint32)
-            per_leaf_keys = [dummy for _ in range(n_leaves)]
-        keys_tree = jax.tree.unflatten(treedef, per_leaf_keys)
-        key_specs = jax.tree.unflatten(
-            treedef, [P(ca, None) for _ in per_leaf_keys])
-        smap = _shard_map_no_repcheck if planar else (
+            keys = jnp.zeros((m, 1, 2), jnp.uint32)
+        smap = _shard_map_no_repcheck if pallas else (
             lambda b, mesh, in_specs, out_specs: _shard_map(
                 b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
         fn = smap(q_body, mesh=mesh,
-                  in_specs=(specs, specs, key_specs) + w_specs,
+                  in_specs=(specs, specs, P(ca, None, None)) + w_specs,
                   out_specs=specs)
-        return fn(x, z, keys_tree, jnp.asarray(wself, jnp.float32),
+        return fn(x, z, keys, jnp.asarray(wself, jnp.float32),
                   jnp.asarray(wsteps, jnp.float32))
 
     return ex

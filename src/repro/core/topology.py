@@ -366,7 +366,15 @@ class TopologySchedule:
                            clients are drawn per round (FedAvg-style fixed
                            cohorts) — the static count lets the round step
                            skip inactive clients' local-SGD compute
-                           entirely (see ``static_active_count``).
+                           entirely (see ``static_active_count``). With
+                           ``cap_slack=c`` the i.i.d. draw is CAPPED at
+                           ``n_cap = ceil(p_active * m) + c`` participants
+                           (overflow rounds — the binomial upper tail,
+                           rare for slack of a few sd — clamp a uniformly
+                           random subset of the extras, so no client is
+                           systematically favored) — a static upper bound
+                           that buys the same compute skip via a padded
+                           gather.
       * ``random_walk``  — a single gossip token walks the base graph; round
                            ``t`` pairwise-averages the token's current and
                            next node (random-walk DFedAvg, arXiv:2508.21286
@@ -394,6 +402,7 @@ class TopologySchedule:
     p_edge: float = 1.0                   # edge_sample
     p_active: float = 1.0                 # partial
     n_active: int | None = None           # partial(exact=True): cohort size
+    n_cap: int | None = None              # partial(cap_slack=...): iid cap
     walk: np.ndarray | None = None        # random_walk: [horizon+1] int32 path
                                           #   (None = stateful in-graph token)
     start: int = 0                        # random_walk(stateful): initial token
@@ -427,15 +436,20 @@ class TopologySchedule:
 
     @property
     def static_active_count(self) -> int | None:
-        """Statically known number of participating clients per round, or
-        None when the count is random. A static count (< m) lets the round
-        step gather just the active lanes, run local SGD on a [k, ...]
-        stack, and scatter back — actually SKIPPING inactive clients'
-        compute instead of gating it out after the fact."""
+        """Static UPPER BOUND on the participating clients per round, or
+        None when no bound below m is known. Exact for cohorts
+        (``partial(exact=True)``) and random walks (2); the configured cap
+        for capped i.i.d. participation. A static bound (< m) lets the
+        round step gather just the active lanes, run local SGD on a
+        [k, ...] stack, and scatter back — actually SKIPPING inactive
+        clients' compute instead of gating it out after the fact (padded
+        slots for the capped case)."""
         if self.kind == "random_walk":
             return 2
         if self.kind == "partial" and self.n_active is not None:
             return self.n_active
+        if self.kind == "partial" and self.n_cap is not None:
+            return self.n_cap
         return None
 
     def expected_directed_edges(self, t: int | None = None) -> float:
@@ -460,7 +474,9 @@ class TopologySchedule:
                 # the size-k cohort (without replacement)
                 k, m = self.n_active, self.m
                 return k * (k - 1) / (m * (m - 1)) * base
-            # an edge is live iff both endpoints drew active
+            # an edge is live iff both endpoints drew active (with a
+            # participation cap this slightly overcounts the clamped
+            # binomial upper tail — negligible for slack of a few sd)
             return self.p_active ** 2 * base
         return 2.0  # random_walk: one undirected edge per round
 
@@ -494,6 +510,19 @@ class TopologySchedule:
             else:
                 active = (jax.random.uniform(key, (m,))
                           < self.p_active).astype(jnp.float32)
+                if self.n_cap is not None and self.n_cap < m:
+                    # Cap the draw at the static bound the padded compute
+                    # gather is sized for. Overflow rounds (the binomial
+                    # upper tail) clamp a KEY-DERIVED RANDOM subset of
+                    # the extras — clamping by client index would
+                    # systematically underweight high-indexed clients'
+                    # data whenever the cap binds.
+                    perm = jax.random.permutation(
+                        jax.random.fold_in(key, 1), m)
+                    keep_perm = jnp.cumsum(active[perm]) <= self.n_cap
+                    keep = (jnp.zeros((m,), jnp.float32)
+                            .at[perm].set(keep_perm.astype(jnp.float32)))
+                    active = active * keep
             live = adj * active[:, None] * active[None, :]
             return metropolis_weights_from_adjacency(live), active
         # random_walk: token edge (pos[t], pos[t+1]) pairwise-averages
@@ -621,24 +650,41 @@ class TopologySchedule:
                                 p_edge=float(p_edge))
 
     @staticmethod
-    def partial(graph: Graph, p_active: float,
-                exact: bool = False) -> "TopologySchedule":
+    def partial(graph: Graph, p_active: float, exact: bool = False,
+                cap_slack: int | None = None) -> "TopologySchedule":
         """``exact=False``: each client participates i.i.d. w.p.
         ``p_active``. ``exact=True``: exactly ``round(p_active * m)``
         clients are drawn (without replacement) every round — a FedAvg-
         style fixed cohort whose statically known size lets the round step
-        skip inactive clients' local-SGD compute."""
+        skip inactive clients' local-SGD compute. ``cap_slack`` (i.i.d.
+        mode only): cap the draw at ``ceil(p_active * m) + cap_slack``
+        participants — a static upper bound that buys the same compute
+        skip through a padded gather; rounds whose binomial draw overflows
+        the cap (rare for slack of a few standard deviations) clamp a
+        key-derived uniformly random subset of the extras to inactive, so
+        the clamp introduces no per-client bias."""
         if not 0.0 < p_active <= 1.0:
             raise ValueError("need 0 < p_active <= 1")
-        n_active = None
+        n_active = n_cap = None
         tag = f"p={p_active}"
         if exact:
+            if cap_slack is not None:
+                raise ValueError("cap_slack applies to i.i.d. partial "
+                                 "participation; exact cohorts already "
+                                 "have a static count")
             n_active = max(1, round(p_active * graph.m))
             tag = f"k={n_active}"
+        elif cap_slack is not None:
+            if cap_slack < 0:
+                raise ValueError("need cap_slack >= 0")
+            n_cap = min(graph.m,
+                        int(np.ceil(p_active * graph.m)) + int(cap_slack))
+            tag = f"p={p_active},cap={n_cap}"
         return TopologySchedule(kind="partial", m=graph.m,
                                 name=f"partial[{graph.name},{tag}]",
                                 adj=graph.adj.astype(np.float64),
-                                p_active=float(p_active), n_active=n_active)
+                                p_active=float(p_active), n_active=n_active,
+                                n_cap=n_cap)
 
     @staticmethod
     def random_walk(graph: Graph, horizon: int = 4096, seed: int = 0,

@@ -1,0 +1,269 @@
+"""Flat wire-buffer layout for the sparse gossip hot loop.
+
+The per-leaf wire path paid the quantized-gossip overhead once PER LEAF
+PER PLAN STEP: encode, two collective launches (words + scale), unpack,
+dequantize — so the communication-optimal backend was compute-pessimal
+(BENCH_gossip.json: sparse q8 moved ~14x fewer bytes than dense q8 yet
+ran ~5x slower). A :class:`WireLayout` removes the per-leaf axis from the
+hot loop entirely: the client-local model pytree is flattened ONCE into a
+single planar ``[per, W]`` buffer (``per = 32 // bits``, lane axis ``W`` a
+multiple of ``LANE_BLOCK``), each leaf occupying a block-aligned column
+segment. Quantize/pack, the per-step ``ppermute``, and the fused
+dequantize/mix then each run once per round on one contiguous array:
+
+  flatten -> quantize/pack (one kernel) -> ppermute (one collective per
+  plan step; per-leaf scales ride in the u32 stream tail) -> fused
+  dequant-mix (one kernel over all received streams).
+
+Numerics are unchanged: scales stay PER LEAF (segment max-abs, the same
+``amax / qmax`` formula as ``core.quantize._scale_for``), and stochastic
+rounding draws the same per-leaf, per-client bits as the dense reference
+(``uniform(key_leaf_client, (n,))``, zero-padded — padding never rounds
+up). The codec has two interchangeable backends: the Pallas buffer
+kernels (``kernels.quantize_pack`` / ``kernels.dequant_mix``, selected on
+TPU) and a pure-XLA reference (CPU default, and the kernels' parity
+oracle: the integer WIRE — packed words and scales — is bit-identical
+between them, and the fused float apply agrees to a few ulp, since XLA
+picks FMA contraction per compiled module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ref import LANE_BLOCK
+
+Pytree = Any
+
+__all__ = ["WireLayout", "LANE_BLOCK"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Planar layout of one client's parameter pytree on the wire.
+
+    Leaf ``i`` (flat size ``sizes[i]``) occupies columns
+    ``[word_offsets[i], word_offsets[i] + leaf_words[i])`` of the
+    ``[per, total_words]`` buffer; ``leaf_words[i]`` is padded up to a
+    multiple of ``LANE_BLOCK`` so every lane block belongs to exactly one
+    leaf (``block_leaf`` maps block -> leaf, which is how per-leaf scales
+    become the kernels' per-block scales). The planar view of a leaf is
+    just the zero-padded flat vector reshaped to ``[per, leaf_words]`` —
+    identical element order to the sequential codec, so quantization
+    decisions are positionwise the same.
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    bits: int | None            # None: fp32 wire (no planar geometry)
+    sizes: tuple
+    per: int
+    leaf_words: tuple
+    word_offsets: tuple
+    total_words: int
+    block_leaf: np.ndarray      # [total_words // LANE_BLOCK] int32
+
+    @staticmethod
+    def for_tree(tree: Pytree, bits: int | None = None) -> "WireLayout":
+        """Build the layout from a CLIENT-LOCAL tree (leaves without the
+        stacked client axis); only shapes/dtypes are read, so abstract
+        values work too."""
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(jnp.asarray(l).dtype if not hasattr(l, "dtype")
+                       else l.dtype for l in leaves)
+        sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+        if bits is None:
+            return WireLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                              bits=None, sizes=sizes, per=1,
+                              leaf_words=sizes,
+                              word_offsets=tuple(np.cumsum((0,) + sizes[:-1])
+                                                 .tolist()),
+                              total_words=int(sum(sizes)),
+                              block_leaf=np.zeros((0,), np.int32))
+        per = 32 // bits
+
+        def aligned_words(n: int) -> int:
+            w = -(-n // per)                       # ceil(n / per)
+            return -(-w // LANE_BLOCK) * LANE_BLOCK
+
+        lw = tuple(aligned_words(n) for n in sizes)
+        offs = tuple(np.cumsum((0,) + lw[:-1]).tolist())
+        total = int(sum(lw))
+        block_leaf = np.repeat(np.arange(len(sizes), dtype=np.int32),
+                               [w // LANE_BLOCK for w in lw])
+        return WireLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                          bits=bits, sizes=sizes, per=per, leaf_words=lw,
+                          word_offsets=offs, total_words=total,
+                          block_leaf=block_leaf)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.total_words // LANE_BLOCK
+
+    def _leaves(self, tree: Pytree) -> list:
+        leaves = self.treedef.flatten_up_to(tree)
+        if len(leaves) != self.n_leaves:
+            raise ValueError("tree does not match layout")
+        return leaves
+
+    # -- fp32 wire: plain flatten/unflatten ---------------------------------
+
+    def flatten_f32(self, tree: Pytree) -> jnp.ndarray:
+        """Client-local tree -> flat f32 [sum(sizes)] (fp32 wire)."""
+        return jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32) for l in self._leaves(tree)])
+
+    def unflatten(self, flat: jnp.ndarray) -> Pytree:
+        outs, off = [], 0
+        for shape, dtype, n in zip(self.shapes, self.dtypes, self.sizes):
+            outs.append(flat[off:off + n].reshape(shape).astype(dtype))
+            off += n
+        return jax.tree.unflatten(self.treedef, outs)
+
+    # -- planar (quantized) wire --------------------------------------------
+
+    def to_planar(self, tree: Pytree) -> jnp.ndarray:
+        """Client-local tree -> [per, total_words] f32, zero-padded."""
+        segs = []
+        for leaf, n, lw in zip(self._leaves(tree), self.sizes,
+                               self.leaf_words):
+            flat = leaf.reshape(-1).astype(jnp.float32)
+            segs.append(jnp.pad(flat, (0, self.per * lw - n))
+                        .reshape(self.per, lw))
+        return jnp.concatenate(segs, axis=1)
+
+    def from_planar(self, buf2d: jnp.ndarray) -> Pytree:
+        outs = []
+        for shape, dtype, n, lw, off in zip(self.shapes, self.dtypes,
+                                            self.sizes, self.leaf_words,
+                                            self.word_offsets):
+            seg = buf2d[:, off:off + lw]
+            outs.append(seg.reshape(-1)[:n].reshape(shape).astype(dtype))
+        return jax.tree.unflatten(self.treedef, outs)
+
+    def to_planar_stacked(self, tree: Pytree) -> jnp.ndarray:
+        """Stacked tree (leaves [m, ...]) -> [m, per, total_words] f32.
+        Row c equals ``to_planar`` of client c's local tree — the batched
+        form the mesh-free reference executor uses."""
+        segs = []
+        for leaf, n, lw in zip(self._leaves(tree), self.sizes,
+                               self.leaf_words):
+            m = leaf.shape[0]
+            flat = leaf.reshape(m, -1).astype(jnp.float32)
+            segs.append(jnp.pad(flat, ((0, 0), (0, self.per * lw - n)))
+                        .reshape(m, self.per, lw))
+        return jnp.concatenate(segs, axis=2)
+
+    def from_planar_stacked(self, buf: jnp.ndarray) -> Pytree:
+        outs = []
+        m = buf.shape[0]
+        for shape, dtype, n, lw, off in zip(self.shapes, self.dtypes,
+                                            self.sizes, self.leaf_words,
+                                            self.word_offsets):
+            seg = buf[:, :, off:off + lw]
+            outs.append(seg.reshape(m, -1)[:, :n]
+                        .reshape((m,) + shape).astype(dtype))
+        return jax.tree.unflatten(self.treedef, outs)
+
+    # -- per-leaf scales and stochastic-rounding noise ----------------------
+
+    def leaf_scales(self, delta: jnp.ndarray, quant) -> jnp.ndarray:
+        """Per-leaf quantizer steps of a planar delta buffer (leading batch
+        dims allowed): the same ``s = max|x| / qmax`` (0 -> 1.0) as
+        ``core.quantize._scale_for``, per leaf segment. [..., n_leaves]."""
+        if quant.scale_mode == "fixed":
+            batch = delta.shape[:-2]
+            return jnp.full(batch + (self.n_leaves,), quant.s, jnp.float32)
+        ss = []
+        for lw, off in zip(self.leaf_words, self.word_offsets):
+            amax = jnp.max(jnp.abs(delta[..., :, off:off + lw]),
+                           axis=(-2, -1))
+            s = amax / quant.qmax
+            ss.append(jnp.where(s > 0, s, jnp.float32(1.0)))
+        return jnp.stack(ss, axis=-1)
+
+    def noise(self, leaf_keys: jnp.ndarray) -> jnp.ndarray:
+        """Stochastic-rounding noise for one client: ``leaf_keys``
+        [n_leaves, 2] uint32 (one PRNG key per leaf — the shared
+        ``_quant_leaf_keys`` derivation, so the dense reference draws the
+        IDENTICAL bits). Padding is zero: ``noise < (a - floor(a))`` never
+        rounds a padded zero up. Returns [per, total_words]."""
+        segs = []
+        for li, (n, lw) in enumerate(zip(self.sizes, self.leaf_words)):
+            u = jax.random.uniform(leaf_keys[li], (n,), jnp.float32)
+            segs.append(jnp.pad(u, (0, self.per * lw - n))
+                        .reshape(self.per, lw))
+        return jnp.concatenate(segs, axis=1)
+
+    def noise_stacked(self, keys: jnp.ndarray) -> jnp.ndarray:
+        """Batched :meth:`noise`: ``keys`` [n_leaves, m, 2] (the raw
+        ``_quant_leaf_keys`` output) -> [m, per, total_words]."""
+        m = keys.shape[1]
+        segs = []
+        for li, (n, lw) in enumerate(zip(self.sizes, self.leaf_words)):
+            u = jax.vmap(lambda k, n=n: jax.random.uniform(
+                k, (n,), jnp.float32))(keys[li])
+            segs.append(jnp.pad(u, ((0, 0), (0, self.per * lw - n)))
+                        .reshape(m, self.per, lw))
+        return jnp.concatenate(segs, axis=2)
+
+    def block_scales(self, scales: jnp.ndarray) -> jnp.ndarray:
+        """Per-leaf scales [..., n_leaves] -> per-lane-block scales
+        [..., n_blocks] (what the buffer kernels consume)."""
+        return scales[..., self.block_leaf]
+
+    # -- codec dispatch -----------------------------------------------------
+
+    def encode(self, delta: jnp.ndarray, scales: jnp.ndarray, quant,
+               leaf_keys=None, pallas: bool = False) -> jnp.ndarray:
+        """Quantize + planar-pack the whole buffer in one pass.
+
+        delta [per, W] f32 (pallas) or [..., per, W] (xla); scales
+        [..., n_leaves]. Returns packed uint32 words [..., W].
+        """
+        from ..kernels import ref as kref
+        sblk = self.block_scales(scales)
+        stochastic = bool(quant.stochastic)
+        if stochastic:
+            if leaf_keys is None:
+                raise ValueError("stochastic encode needs per-leaf keys")
+            noise = (self.noise(leaf_keys) if delta.ndim == 2
+                     else self.noise_stacked(leaf_keys))
+        else:
+            noise = None
+        if pallas:
+            from ..kernels.ops import default_interpret
+            from ..kernels.quantize_pack import quantize_pack_buffer_pallas
+            nz = noise if noise is not None else jnp.zeros_like(delta)
+            return quantize_pack_buffer_pallas(
+                delta, sblk.reshape(1, -1), nz, bits=quant.bits,
+                stochastic=stochastic, interpret=default_interpret())
+        return kref.quantize_pack_buffer_ref(delta, sblk, quant.bits,
+                                             noise=noise)
+
+    def decode_apply(self, base: jnp.ndarray, streams: jnp.ndarray,
+                     scales: jnp.ndarray, weights: jnp.ndarray, quant,
+                     pallas: bool = False) -> jnp.ndarray:
+        """Fused ``base + sum_k weights[k] * deq(streams[k], scales[k])``
+        over the whole buffer: base [..., per, W]; streams uint32
+        [..., k, W]; scales [..., k, n_leaves]; weights [..., k]."""
+        sblk = self.block_scales(scales)
+        if pallas:
+            from ..kernels.dequant_mix import dequant_mix_buffer_pallas
+            from ..kernels.ops import default_interpret
+            return dequant_mix_buffer_pallas(
+                base, streams, sblk, weights, bits=quant.bits,
+                interpret=default_interpret())
+        from ..kernels import ref as kref
+        return kref.dequant_mix_buffer_ref(base, streams, sblk, weights,
+                                           quant.bits)

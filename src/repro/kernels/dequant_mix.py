@@ -66,6 +66,68 @@ def _dequant_mix_plan_kernel(x_ref, q_ref, sw_ref, out_ref, *, bits: int,
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _dequant_mix_buffer_kernel(x_ref, q_ref, s_ref, w_ref, out_ref, *,
+                               bits: int, n_streams: int):
+    """Flat-wire-buffer fused apply: the whole model's planar buffer in
+    one kernel, with PER-LANE-BLOCK scales (each block carries its owning
+    leaf's scale — see ``core.wire_layout``):
+
+        out = x + sum_k w[k] * deq(stream[k], scale[k, block])
+
+    Streams are the client's OWN packed words plus one received stream per
+    plan step; scales and weights are runtime values (per-round gathered
+    weights of a time-varying ``W_t``). Replaces one dequantized f32
+    tensor per stream in HBM with a single VMEM pass over the buffer.
+    Same accumulation order as ``ref.dequant_mix_buffer_ref``; equality
+    with the oracle is a few ulp, not bitwise (FMA contraction is a
+    per-compilation choice — see the oracle's docstring).
+    """
+    per = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    offset = jnp.int32(1 << (bits - 1))
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (per, 1), 0) * bits
+
+    acc = x_ref[...].astype(jnp.float32)
+    for k in range(n_streams):
+        fields = (q_ref[k][None, :] >> shifts) & mask
+        deq = (fields.astype(jnp.int32) - offset).astype(jnp.float32) \
+            * s_ref[k, 0]
+        acc += w_ref[0, k] * deq
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequant_mix_buffer_pallas(x2d: jnp.ndarray, streams: jnp.ndarray,
+                              block_scales: jnp.ndarray,
+                              weights: jnp.ndarray, *, bits: int,
+                              interpret: bool = False) -> jnp.ndarray:
+    """x2d: [per, W] (f32/bf16) planar buffer; streams: uint32 [k, W];
+    block_scales: f32 [k, W // LANE_BLOCK]; weights: f32 [k] (traced OK).
+    Returns [per, W]. VMEM per step: (per + k) * LANE_BLOCK words — e.g.
+    b=8, k=5: 9 * 512 * 4 B ≈ 18 KiB, far under budget."""
+    per, w = x2d.shape
+    k = streams.shape[0]
+    n_blocks = w // LANE_BLOCK
+    assert per == 32 // bits and w % LANE_BLOCK == 0, (per, w)
+    assert block_scales.shape == (k, n_blocks), (block_scales.shape, k)
+    kernel = functools.partial(_dequant_mix_buffer_kernel, bits=bits,
+                               n_streams=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, i)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, streams, block_scales.astype(jnp.float32),
+      weights.reshape(1, k).astype(jnp.float32))
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def dequant_mix_plan_pallas(x2d: jnp.ndarray, streams: jnp.ndarray,
                             scales: jnp.ndarray, weights: jnp.ndarray, *,

@@ -45,6 +45,42 @@ def _quantize_pack_kernel(x_ref, noise_ref, s_ref, out_ref, *, bits: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("bits", "stochastic", "interpret"))
+def quantize_pack_buffer_pallas(x2d: jnp.ndarray, s_blocks: jnp.ndarray,
+                                noise: jnp.ndarray, *, bits: int,
+                                stochastic: bool, interpret: bool = False
+                                ) -> jnp.ndarray:
+    """Flat-wire-buffer encoder: one ``pallas_call`` quantizes and packs a
+    whole model's planar buffer with PER-LANE-BLOCK scales.
+
+    x2d: [per, W] f32 (a ``core.wire_layout.WireLayout`` buffer, leaf
+    segments block-aligned); s_blocks: f32 [1, W // LANE_BLOCK] — block
+    ``i`` reads its owning leaf's scale, so per-leaf quantization survives
+    the flattening; noise: [per, W] (ignored unless stochastic). Returns
+    uint32 [W]. Same kernel body as :func:`quantize_pack_pallas`; only the
+    scale BlockSpec walks the segment-scale vector.
+    """
+    per, w = x2d.shape
+    assert per == 32 // bits and w % LANE_BLOCK == 0, (per, w)
+    n_blocks = w // LANE_BLOCK
+    assert s_blocks.shape == (1, n_blocks), (s_blocks.shape, n_blocks)
+    kernel = functools.partial(_quantize_pack_kernel, bits=bits,
+                               stochastic=stochastic)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((LANE_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint32),
+        interpret=interpret,
+    )(x2d, noise, s_blocks.astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "stochastic", "interpret"))
 def quantize_pack_pallas(x2d: jnp.ndarray, s: jnp.ndarray,
                          noise: jnp.ndarray, *, bits: int,
                          stochastic: bool, interpret: bool = False

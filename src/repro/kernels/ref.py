@@ -62,6 +62,70 @@ def unpack_dequant_ref(words: jnp.ndarray, bits: int, s: jnp.ndarray,
     return (k.astype(jnp.float32) * s).reshape(per * w)[:n]
 
 
+def quantize_pack_buffer_ref(x: jnp.ndarray, block_scales: jnp.ndarray,
+                             bits: int,
+                             noise: jnp.ndarray | None = None
+                             ) -> jnp.ndarray:
+    """Whole-buffer quantize + planar pack with PER-LANE-BLOCK scales (the
+    flat wire path: each ``LANE_BLOCK``-word block carries its owning
+    leaf's scale — see ``core.wire_layout.WireLayout``).
+
+    x: [..., per, W] f32 (W % LANE_BLOCK == 0); block_scales:
+    [..., W // LANE_BLOCK] f32; noise: uniform[0,1) like x for stochastic
+    rounding, None = deterministic floor. Returns uint32 [..., W].
+
+    This is both the CPU execution path of the flat codec and the
+    bit-exactness oracle for ``quantize_pack_buffer_pallas``.
+    """
+    per = 32 // bits
+    qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    s = jnp.repeat(block_scales.astype(jnp.float32), LANE_BLOCK, axis=-1)
+    a = x.astype(jnp.float32) / s[..., None, :]
+    k = jnp.floor(a)
+    if noise is not None:
+        k = k + (noise < (a - k)).astype(jnp.float32)
+    k = jnp.clip(k, qmin, qmax).astype(jnp.int32)
+    fields = (k + (1 << (bits - 1))).astype(jnp.uint32)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[:, None]
+    return (fields << shifts).sum(axis=-2, dtype=jnp.uint32)
+
+
+def dequant_mix_buffer_ref(base: jnp.ndarray, streams: jnp.ndarray,
+                           block_scales: jnp.ndarray, weights: jnp.ndarray,
+                           bits: int) -> jnp.ndarray:
+    """Whole-buffer fused unpack + dequantize + weighted apply:
+
+        out = base + sum_k weights[..., k] * deq(streams[..., k, :])
+
+    base: [..., per, W]; streams: uint32 [..., K, W]; block_scales:
+    [..., K, W // LANE_BLOCK]; weights: [..., K] (traced OK — the
+    per-round gathered mask). CPU path + oracle of
+    ``dequant_mix_buffer_pallas``; the accumulation order (own stream
+    first, then plan steps) matches the kernel exactly.
+
+    Bitwise caveat: the integer unpack and the VALUES fed into the
+    accumulation are exact, but XLA may contract each multiply-add into
+    an FMA depending on the surrounding fusion, so two compilations of
+    this accumulation can differ by ~1 ulp per term. The flat wire path
+    therefore guarantees a BITWISE wire (words + scales) and a
+    few-ulp-reproducible fused output — never bitwise float equality
+    across independently compiled modules.
+    """
+    per = 32 // bits
+    n_streams = streams.shape[-2]
+    mask = jnp.uint32((1 << bits) - 1)
+    offset = 1 << (bits - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[:, None]
+    scol = jnp.repeat(block_scales.astype(jnp.float32), LANE_BLOCK, axis=-1)
+    acc = base.astype(jnp.float32)
+    for k in range(n_streams):
+        fields = (streams[..., k, None, :] >> shifts) & mask
+        deq = (fields.astype(jnp.int32) - offset).astype(jnp.float32) \
+            * scol[..., k, None, :]
+        acc = acc + weights[..., k, None, None] * deq
+    return acc.astype(base.dtype)
+
+
 def dequant_mix_ref(x: jnp.ndarray, q_own: jnp.ndarray, q_left: jnp.ndarray,
                     q_right: jnp.ndarray, scales: jnp.ndarray, bits: int,
                     w_self: float, w_nb: float) -> jnp.ndarray:

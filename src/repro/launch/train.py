@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +43,8 @@ def build_topology(args, m: int):
         base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
                 if args.base_graph == "er" else ring_graph(m))
         return TopologySchedule.partial(base, args.p_active,
-                                        exact=args.exact_partial)
+                                        exact=args.exact_partial,
+                                        cap_slack=args.partial_cap_slack)
     if args.schedule == "random-walk":
         base = (erdos_renyi_graph(m, args.er_p, seed=args.seed)
                 if args.base_graph == "er" else ring_graph(m))
@@ -76,6 +78,12 @@ def main(argv=None):
                     help="gossip backend: dense einsum vs sparse GossipPlan"
                          " ppermutes; auto picks sparse when this host has"
                          " >= one device per client")
+    ap.add_argument("--wire", default="auto",
+                    choices=["auto", "seq", "planar"],
+                    help="flat wire-buffer codec for the sparse mixer: "
+                         "planar = Pallas buffer kernels (TPU), seq = the "
+                         "XLA lowering of the same math (CPU); auto picks "
+                         "by backend")
     ap.add_argument("--self-weight", type=float, default=0.5,
                     help="ring self weight (0.5 => PSD W, safe for Alg. 2)")
     ap.add_argument("--schedule", default="static",
@@ -94,6 +102,11 @@ def main(argv=None):
                     help="partial schedule draws an EXACT cohort of "
                          "round(p_active*m) clients; the static count lets "
                          "the round step skip inactive clients' compute")
+    ap.add_argument("--partial-cap-slack", type=int, default=None,
+                    help="cap i.i.d. partial participation at "
+                         "ceil(p_active*m)+slack clients per round — a "
+                         "static upper bound that buys the same local-SGD "
+                         "compute skip via a padded gather")
     ap.add_argument("--stateful-walk", action="store_true",
                     help="random-walk token as in-graph RoundState instead "
                          "of a precomputed host-side path")
@@ -135,7 +148,7 @@ def main(argv=None):
     client_axes = ("clients",) if mesh is not None else ()
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
                           local_steps=args.local_steps, quant=quant,
-                          mixer_impl=impl)
+                          mixer_impl=impl, wire=args.wire)
     scheduled = isinstance(spec, TopologySchedule)
     plan = None
     if impl == "sparse":
@@ -169,9 +182,15 @@ def main(argv=None):
         acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness)
         print(f"async gossip: speed={args.speed_model} "
               f"max_staleness={args.max_staleness} (rounds are EVENTS)")
+    # Donating the round state lets XLA reuse the params/momentum HBM in
+    # place instead of round-tripping a fresh copy every round (a no-op
+    # warning on CPU, a real saving on device).
+    warnings.filterwarnings("ignore",
+                            message="Some donated buffers were not usable")
     step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
                                    client_axes=client_axes or (),
-                                   async_cfg=acfg))
+                                   async_cfg=acfg),
+                   donate_argnums=(0,))
     if acfg is not None:
         state = init_async_state(stacked, k_state, acfg.speed)
     else:
@@ -180,14 +199,11 @@ def main(argv=None):
         state = init_round_state(stacked, k_state, token=token)
 
     d = cfg.n_params()
-    # Sparse backend: bill the plan's realized wire edges, not the
-    # schedule's expectation. Async: realized bytes are billed per event
-    # below (the live edge set varies with readiness and staleness).
+    # One billing convention for both backends: the live-directed-edge
+    # expectation (paper §3.2). Async: realized live edges are billed per
+    # event below (the set varies with readiness and staleness).
     ledger = CommLedger(0.0 if acfg is not None
-                        else round_comm_bits(spec, d, quant, plan=plan))
-    # The async engine lowers cycles through the UNION plan (its event
-    # matrices are staleness-dependent), so bill that one.
-    bill_plan = spec.gossip_plan() if isinstance(plan, list) else plan
+                        else round_comm_bits(spec, d, quant))
     t0 = time.time()
     for t in range(args.rounds):
         batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,
@@ -196,8 +212,7 @@ def main(argv=None):
         state, metrics = step(state, batches)
         if acfg is not None:
             ledger.add_bits(async_event_bits(
-                d, quant, live_edges=float(metrics["live_edges"]),
-                plan=bill_plan))
+                d, quant, live_edges=float(metrics["live_edges"])))
         else:
             ledger.tick()
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:

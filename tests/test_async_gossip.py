@@ -289,9 +289,75 @@ def test_skip_inactive_compute_reduces_flops():
 def test_skip_requires_static_count():
     _, loss_fn, _ = quad_problem()
     sched = TopologySchedule.partial(ring_graph(M), 0.5)   # i.i.d.: dynamic
-    with pytest.raises(ValueError, match="statically known"):
+    with pytest.raises(ValueError, match="statically bounded"):
         make_round_step(loss_fn, DFedAvgMConfig(), sched,
                         skip_inactive_compute=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: padded upper-bound gather for capped i.i.d. participation
+# ---------------------------------------------------------------------------
+
+def test_capped_partial_respects_static_bound():
+    """cap_slack turns the i.i.d. draw into a statically bounded one: no
+    round ever exceeds the cap, and the schedule advertises it."""
+    sched = TopologySchedule.partial(ring_graph(M), 0.5, cap_slack=1)
+    cap = int(np.ceil(0.5 * M)) + 1
+    assert sched.static_active_count == cap
+    for t in range(40):
+        W, active = sched.sample_w(jax.random.PRNGKey(t), t)
+        n_act = int(np.asarray(active).sum())
+        assert n_act <= cap
+        W = np.asarray(W, np.float64)
+        assert np.allclose(W.sum(axis=1), 1.0, atol=1e-6)
+        assert np.allclose(W, W.T, atol=1e-6)
+        # inactive rows degenerate to e_i
+        for i in np.nonzero(np.asarray(active) == 0)[0]:
+            assert W[i, i] == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="cap_slack"):
+        TopologySchedule.partial(ring_graph(M), 0.5, exact=True,
+                                 cap_slack=1)
+
+
+def test_capped_partial_padded_gather_same_numerics():
+    """The padded gather (out-of-bounds fill slots, drop-mode scatter) is
+    exact: skip on == skip off, params and metrics, even on rounds with
+    fewer actives than the cap."""
+    _, loss_fn, batches = quad_problem()
+    sched = TopologySchedule.partial(ring_graph(M), 0.5, cap_slack=2)
+    assert sched.static_active_count < M
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    step_skip = jax.jit(make_round_step(loss_fn, cfg, sched))  # auto: on
+    step_full = jax.jit(make_round_step(loss_fn, cfg, sched,
+                                        skip_inactive_compute=False))
+    s1 = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(9))
+    s2 = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(9))
+    for _ in range(6):
+        s1, m1 = step_skip(s1, batches)
+        s2, m2 = step_full(s2, batches)
+        assert float(m1["active_frac"]) == float(m2["active_frac"])
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                  rel=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.params["w"]),
+                               np.asarray(s2.params["w"]),
+                               rtol=0, atol=1e-6)
+
+
+def test_capped_partial_skip_reduces_flops():
+    """The ROADMAP follow-up: i.i.d. participation now skips inactive
+    lanes' local SGD too — ~cap/m of the FLOPs, visible in the HLO."""
+    from repro.launch.hlo_stats import traced_flops
+    params, loss_fn, batches = dot_problem()
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    st = init_round_state(params, jax.random.PRNGKey(0))
+    sched = TopologySchedule.partial(ring_graph(M), 0.25, cap_slack=1)
+    assert sched.static_active_count == 3
+    f_skip = traced_flops(make_round_step(loss_fn, cfg, sched), st, batches)
+    f_full = traced_flops(
+        make_round_step(loss_fn, cfg, sched, skip_inactive_compute=False),
+        st, batches)
+    # 3 of 8 lanes train: local-SGD FLOPs drop ~2.7x; overhead caps it.
+    assert f_skip < 0.7 * f_full, (f_skip, f_full)
 
 
 def test_exact_partial_cohort_size_is_exact():
@@ -387,11 +453,13 @@ def test_cycle_member_plans_drop_union_wire():
 # ---------------------------------------------------------------------------
 
 def test_async_event_bits_and_ledger():
+    """One billing convention: an event bills its realized live directed
+    edges, whatever backend executed the mix (the sparse plan wire is a
+    diagnostic, not the bill — see plan_round_bits)."""
     d = 100
     assert async_event_bits(d, None, live_edges=4) == 32 * d * 4
-    plan = MixingSpec.ring(M, self_weight=0.5).gossip_plan()
-    assert async_event_bits(d, None, plan=plan) == \
-        plan_round_bits(plan, d, None)
+    q = QuantConfig(bits=8)
+    assert async_event_bits(d, q, live_edges=3) == (32 + 8 * d) * 3
     with pytest.raises(ValueError):
         async_event_bits(d, None)
     led = CommLedger(0.0)

@@ -181,18 +181,25 @@ def test_auto_resolution_prefers_sparse_when_mesh_fits():
         assert cfg.resolved_impl(spec, None) == "dense"
 
 
-def test_explicit_planar_wire_downgrade_warns():
-    """wire='planar' only fuses the eq7 per-tensor path; asking for it
-    with lemma5 must not silently hand back the sequential codec."""
+def test_planar_wire_supports_every_quant_mode():
+    """The flat wire-buffer path runs EVERY quant mode through the Pallas
+    buffer kernels — the old eq7-only planar restriction (which used to
+    warn and silently fall back to the per-leaf sequential codec) is
+    gone."""
     import types
+    import warnings as warnings_mod
     from repro.core.mixing import _make_sparse_exec
     mesh8 = types.SimpleNamespace(axis_names=("clients",),
                                   devices=np.zeros((M,)))
     plan = MixingSpec.ring(M).gossip_plan()
-    with pytest.warns(UserWarning, match="sequential"):
-        _make_sparse_exec(plan, mesh8, ("clients",), None,
-                          QuantConfig(bits=8, delta_mode="lemma5"),
-                          wire="planar")
+    for q in (QuantConfig(bits=8, delta_mode="lemma5"),
+              QuantConfig(bits=8, delta_mode="eq7"),
+              QuantConfig(bits=4, scale_mode="fixed", s=1e-3)):
+        with warnings_mod.catch_warnings():
+            warnings_mod.simplefilter("error")
+            ex = _make_sparse_exec(plan, mesh8, ("clients",), None, q,
+                                   wire="planar")
+        assert callable(ex)
 
 
 def test_unquantized_sparse_impls_require_mesh():
@@ -206,7 +213,7 @@ def test_unquantized_sparse_impls_require_mesh():
 # Realized-edge billing
 # ---------------------------------------------------------------------------
 
-def test_plan_round_bits_bills_realized_wire_edges():
+def test_plan_round_bits_is_a_wire_diagnostic_not_the_bill():
     d = 1000
     ring = MixingSpec.ring(M, self_weight=0.5)
     plan = ring.gossip_plan()
@@ -217,17 +224,18 @@ def test_plan_round_bits_bills_realized_wire_edges():
     q5 = QuantConfig(bits=4, delta_mode="lemma5")
     assert plan_round_bits(plan, d, q5, count_lemma5_replicas=True) \
         == (32 + 4 * d + 32 * d) * 2 * M
-    # round_comm_bits dispatches to the plan when one is available
+    # static specs: plan wire == live edges, so every view agrees
     assert round_comm_bits(ring, d, None, plan=plan) \
         == plan_round_bits(plan, d, None)
-    # schedules: expectation-based vs realized-plan billing differ — the
-    # sparse backend moves the FULL plan wire even on a sampled round
+    # schedules: the LEDGER convention is the live-edge expectation for
+    # BOTH backends; the plan's full masked wire stays available as a
+    # diagnostic of what the sparse collective physically moves (1/p x)
     sched = TopologySchedule.edge_sample(ring_graph(M), 0.5)
     splan = sched.gossip_plan()
     assert schedule_round_bits(sched, d, None) \
         == pytest.approx(0.5 * plan_round_bits(splan, d, None))
     assert round_comm_bits(sched, d, None, plan=splan) \
-        == plan_round_bits(splan, d, None)
+        == schedule_round_bits(sched, d, None)
 
 
 # ---------------------------------------------------------------------------

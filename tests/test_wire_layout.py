@@ -1,0 +1,225 @@
+"""Flat wire-buffer subsystem: layout invariants, codec kernel-vs-oracle
+bit-exactness, and the quantized plan reference vs the dense recursion.
+
+The mesh (shard_map) realization of the same path is pinned bit-for-bit
+against ``execute_plan_reference`` on a real 8-device CPU mesh in
+test_sparse_backend_mesh.py; this module covers everything that needs no
+mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MixingSpec, QuantConfig, execute_plan_reference
+from repro.core.mixing import _mix_dense_quantized, _quant_leaf_keys
+from repro.core.wire_layout import LANE_BLOCK, WireLayout
+from repro.kernels import ref as kref
+from repro.kernels.dequant_mix import dequant_mix_buffer_pallas
+from repro.kernels.quantize_pack import quantize_pack_buffer_pallas
+
+M = 8
+
+
+def tree_like(key, shapes, dtypes=None):
+    ks = jax.random.split(key, len(shapes))
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    return {f"l{i}": jax.random.normal(k, s).astype(dt)
+            for i, (k, s, dt) in enumerate(zip(ks, shapes, dtypes))}
+
+
+SHAPE_SETS = [
+    [(33,)],                              # one small leaf
+    [(4, 9), (130,), ()],                 # mixed ranks incl. scalar
+    [(2048,), (3, 7, 5), (1,)],           # one leaf spanning blocks
+]
+
+
+# ---------------------------------------------------------------------------
+# Layout invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shapes", SHAPE_SETS, ids=str)
+@pytest.mark.parametrize("bits", (4, 8))
+def test_layout_geometry_and_roundtrip(shapes, bits):
+    tree = tree_like(jax.random.PRNGKey(0), shapes)
+    layout = WireLayout.for_tree(tree, bits=bits)
+    per = 32 // bits
+    assert layout.per == per
+    # every leaf segment is lane-block aligned and big enough
+    for n, lw in zip(layout.sizes, layout.leaf_words):
+        assert lw % LANE_BLOCK == 0 and per * lw >= n
+    assert layout.total_words == sum(layout.leaf_words)
+    # block -> leaf map covers each leaf's blocks contiguously
+    assert layout.block_leaf.shape == (layout.n_blocks,)
+    assert (np.bincount(layout.block_leaf,
+                        minlength=layout.n_leaves) * LANE_BLOCK
+            == np.array(layout.leaf_words)).all()
+    # planar roundtrip is exact
+    buf = layout.to_planar(tree)
+    assert buf.shape == (per, layout.total_words)
+    back = layout.from_planar(buf)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    # fp32 roundtrip too
+    fl = WireLayout.for_tree(tree)
+    flat = fl.flatten_f32(tree)
+    assert flat.shape == (sum(fl.sizes),)
+    back = fl.unflatten(flat)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_layout_stacked_matches_per_client():
+    tree = tree_like(jax.random.PRNGKey(1), [(M, 5, 3), (M, 40)])
+    local = jax.tree.map(lambda l: l[0], tree)
+    layout = WireLayout.for_tree(local, bits=8)
+    stacked = layout.to_planar_stacked(tree)
+    for c in range(M):
+        row = layout.to_planar(jax.tree.map(lambda l: l[c], tree))
+        np.testing.assert_array_equal(np.asarray(stacked[c]),
+                                      np.asarray(row))
+    back = layout.from_planar_stacked(stacked)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_leaf_scales_match_dense_reference_formula():
+    """Per-leaf segment scales equal core.quantize's per-tensor scale on
+    the unpadded leaf (padding zeros never win the max)."""
+    from repro.core.quantize import _scale_for
+    tree = tree_like(jax.random.PRNGKey(2), [(77,), (3, 5), (513,)])
+    q = QuantConfig(bits=8, stochastic=False)
+    layout = WireLayout.for_tree(tree, bits=8)
+    buf = layout.to_planar(tree)
+    scales = layout.leaf_scales(buf, q)
+    for li, k in enumerate(tree):
+        expect = _scale_for(tree[k].reshape(-1), q)
+        assert float(scales[li]) == float(expect)
+    # fixed mode broadcasts the configured step
+    qf = QuantConfig(bits=8, scale_mode="fixed", s=1e-3)
+    np.testing.assert_array_equal(
+        np.asarray(layout.leaf_scales(buf, qf)),
+        np.full(layout.n_leaves, 1e-3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Codec: Pallas buffer kernels vs XLA oracle, bit-exact on the same inputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", (2, 4, 8, 16))
+@pytest.mark.parametrize("stochastic", (False, True))
+def test_encode_buffer_kernel_matches_oracle(bits, stochastic):
+    per = 32 // bits
+    w = 3 * LANE_BLOCK
+    x = jax.random.normal(jax.random.PRNGKey(bits), (per, w)) * 0.3
+    sblk = jnp.abs(jax.random.normal(jax.random.PRNGKey(1),
+                                     (w // LANE_BLOCK,))) * 0.01 + 1e-3
+    noise = jax.random.uniform(jax.random.PRNGKey(2), (per, w))
+    kernel = quantize_pack_buffer_pallas(
+        x, sblk.reshape(1, -1), noise, bits=bits, stochastic=stochastic,
+        interpret=True)
+    oracle = kref.quantize_pack_buffer_ref(
+        x, sblk, bits, noise=noise if stochastic else None)
+    assert kernel.dtype == jnp.uint32 and kernel.shape == (w,)
+    assert jnp.array_equal(kernel, oracle)
+
+
+@pytest.mark.parametrize("bits", (4, 8, 16))
+@pytest.mark.parametrize("k", (1, 3, 5))
+def test_decode_buffer_kernel_matches_oracle(bits, k):
+    per = 32 // bits
+    w = 2 * LANE_BLOCK
+    base = jax.random.normal(jax.random.PRNGKey(0), (per, w))
+    streams = jax.random.bits(jax.random.PRNGKey(1), (k, w), jnp.uint32)
+    sblk = jnp.abs(jax.random.normal(jax.random.PRNGKey(2),
+                                     (k, w // LANE_BLOCK))) * 0.01
+    weights = jax.random.uniform(jax.random.PRNGKey(3), (k,))
+    kernel = dequant_mix_buffer_pallas(base, streams, sblk, weights,
+                                       bits=bits, interpret=True)
+    oracle = kref.dequant_mix_buffer_ref(base, streams, sblk, weights, bits)
+    # The dequantized VALUES and accumulation order are identical, but
+    # XLA chooses FMA contraction per compilation, so kernel vs oracle
+    # floats are pinned at a few ulp of the accumulated magnitude, not
+    # bitwise (the integer ENCODE wire is bitwise — test above).
+    o = np.asarray(oracle)
+    tol = 8 * np.finfo(np.float32).eps * (np.abs(o).max() + 1.0)
+    np.testing.assert_allclose(np.asarray(kernel), o, rtol=0, atol=tol)
+
+
+def test_decode_buffer_applies_per_block_scales():
+    """Each lane block dequantizes with ITS leaf's scale — the property
+    that lets one kernel serve every leaf of the model."""
+    bits, per = 8, 4
+    w = 2 * LANE_BLOCK
+    vals = jnp.concatenate([jnp.full((per, LANE_BLOCK), 3.0),
+                            jnp.full((per, LANE_BLOCK), 3.0)], axis=1)
+    sblk = jnp.array([[1.0, 2.0]], jnp.float32)       # [1, 2 blocks]
+    words = kref.quantize_pack_buffer_ref(vals, sblk[0], bits)
+    out = kref.dequant_mix_buffer_ref(jnp.zeros((per, w)), words[None],
+                                      sblk, jnp.ones((1,)), bits)
+    np.testing.assert_allclose(np.asarray(out[:, :LANE_BLOCK]), 3.0)
+    np.testing.assert_allclose(np.asarray(out[:, LANE_BLOCK:]), 2.0)
+    # 3.0 / 2.0 floors to 1 -> dequantizes to 2.0 with the second scale
+
+
+# ---------------------------------------------------------------------------
+# Quantized plan reference vs the dense recursion (mesh-free)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [
+    QuantConfig(bits=8, stochastic=False, delta_mode="eq7"),
+    QuantConfig(bits=8, stochastic=False, delta_mode="lemma5"),
+    QuantConfig(bits=8, stochastic=True, delta_mode="eq7"),
+    QuantConfig(bits=8, stochastic=True, delta_mode="lemma5"),
+    QuantConfig(bits=4, stochastic=False, delta_mode="eq7",
+                scale_mode="fixed", s=1e-2),
+], ids=lambda q: f"b{q.bits}-{q.delta_mode}-"
+                 f"{'st' if q.stochastic else 'det'}-{q.scale_mode}")
+def test_quantized_plan_reference_matches_dense(quant):
+    """execute_plan_reference(quant=...) — the flat wire path's spec —
+    agrees with the dense quantized recursion on a static ring, for every
+    delta mode / rounding / scale mode (the stochastic cases draw the
+    SAME bits via the shared key derivation)."""
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    plan = spec.gossip_plan()
+    x = tree_like(jax.random.PRNGKey(0), [(M, 33), (M, 3, 2)])
+    z = tree_like(jax.random.PRNGKey(1), [(M, 33), (M, 3, 2)])
+    key = jax.random.PRNGKey(7)
+    out = execute_plan_reference(plan, spec.W, z, x=x, quant=quant, key=key)
+    ref = _mix_dense_quantized(spec.W, x, z, quant, key)
+    for k in z:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=0, atol=1e-5)
+
+
+def test_quantized_plan_reference_needs_x():
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    z = tree_like(jax.random.PRNGKey(1), [(M, 33)])
+    with pytest.raises(ValueError, match="held state"):
+        execute_plan_reference(spec.gossip_plan(), spec.W, z,
+                               quant=QuantConfig(bits=8, stochastic=False))
+
+
+def test_shared_noise_derivation_is_single_sourced():
+    """The layout's stochastic noise equals per-leaf uniform draws from
+    _quant_leaf_keys — the invariant that keeps dense, reference, and
+    mesh stochastic rounding in lockstep."""
+    tree = tree_like(jax.random.PRNGKey(3), [(50,), (4, 4)])
+    layout = WireLayout.for_tree(tree, bits=8)
+    key = jax.random.PRNGKey(11)
+    keys = _quant_leaf_keys(key, layout.n_leaves, M)     # [nl, m, 2]
+    stacked = layout.noise_stacked(keys)                 # [m, per, W]
+    for c in (0, M - 1):
+        one = layout.noise(keys[:, c])
+        np.testing.assert_array_equal(np.asarray(stacked[c]),
+                                      np.asarray(one))
+    for li, (n, lw, off) in enumerate(zip(layout.sizes, layout.leaf_words,
+                                          layout.word_offsets)):
+        seg = np.asarray(stacked[0, :, off:off + lw]).reshape(-1)
+        expect = np.asarray(jax.random.uniform(keys[li, 0], (n,)))
+        np.testing.assert_array_equal(seg[:n], expect)
+        assert (seg[n:] == 0).all()
