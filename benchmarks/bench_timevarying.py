@@ -57,6 +57,25 @@ def schedules(m: int, rounds: int, seed: int = 0):
 # Dense vs sparse backend: HLO collective bytes + wall clock per round
 # ---------------------------------------------------------------------------
 
+def _run_json_subprocess(src: str, devices: int) -> dict:
+    """Run a bench source template in a subprocess with ``devices`` fake
+    host devices and parse its ``JSON::`` payload — the one runner both
+    compare arms share, so env setup and result protocol can't drift
+    between them."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(src)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"gossip compare subprocess failed:\n{r.stderr}")
+    payload = next(l for l in r.stdout.splitlines()
+                   if l.startswith("JSON::"))[len("JSON::"):]
+    return json.loads(payload)
+
+
 _COMPARE_SRC = """
     import json, time, warnings
     import numpy as np, jax, jax.numpy as jnp
@@ -128,6 +147,89 @@ _COMPARE_SRC = """
 """
 
 
+_BLOCK_SRC = """
+    import json, time, warnings
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core import (MixerConfig, QuantConfig, TopologySchedule,
+                            make_mixer, plan_round_bits)
+    from repro.core.topology import ring_graph
+    from repro.launch.hlo_stats import collect_collectives
+
+    warnings.filterwarnings("ignore",
+                            message="Some donated buffers were not usable")
+    m, shards, d, iters = {m}, {shards}, {d}, {iters}
+    mesh = Mesh(np.array(jax.devices()[:shards]), ("clients",))
+    sched = TopologySchedule.edge_sample(ring_graph(m), p_edge=0.5)
+    plan = sched.gossip_plan()
+    bp = plan.block_plan(shards)
+    sh = NamedSharding(mesh, P("clients", None))
+    x_host = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (m, d)))
+    z = jax.device_put(jax.random.normal(jax.random.PRNGKey(1), (m, d)), sh)
+    out = {{"m": m, "n_shards": shards, "clients_per_shard": bp.m_local,
+            "d": d, "schedule": sched.name,
+            "block_collectives": bp.num_collectives,
+            "block_wire_lane_slots": bp.num_wire_lane_slots,
+            "boundary_directed_edges":
+                ring_graph(m).block_boundary_edges(bp.m_local)}}
+    for bits in (32, 8):
+        q = (QuantConfig(bits=bits, stochastic=False, delta_mode="eq7")
+             if bits < 32 else None)
+        for impl in ("dense", "sparse"):
+            mx = make_mixer(sched, MixerConfig(impl=impl, quant=q),
+                            mesh=mesh if impl == "sparse" else None,
+                            client_axes=("clients",))
+            fn = jax.jit(lambda a, b, k, t: mx({{"w": a}}, {{"w": b}},
+                                               k, t)[0]["w"],
+                         donate_argnums=(0,))
+            key = jax.random.PRNGKey(2)
+            x = jax.device_put(x_host, sh)
+            txt = fn.lower(x, z, key, 0).compile().as_text()
+            stats = collect_collectives(txt).as_dict()
+            r = jax.block_until_ready(fn(x, z, key, 0))
+            us = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                for t in range(iters):
+                    r = fn(r, z, key, t)
+                jax.block_until_ready(r)
+                us = min(us, (time.perf_counter() - t0) / iters * 1e6)
+            arm = {{"wire_bytes_per_device": stats["wire_bytes"],
+                    "collectives": stats["counts"],
+                    "us_per_round": us}}
+            if impl == "sparse":
+                arm["realized_wire_bits"] = plan_round_bits(
+                    plan, d, q, clients_per_shard=bp.m_local)
+            out[f"{{impl}}_b{{bits}}"] = arm
+    for bits in (32, 8):
+        dn, sp = out[f"dense_b{{bits}}"], out[f"sparse_b{{bits}}"]
+        out[f"wire_ratio_dense_over_block_b{{bits}}"] = (
+            dn["wire_bytes_per_device"] /
+            max(sp["wire_bytes_per_device"], 1e-9))
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def block_gossip_compare(smoke: bool = False) -> dict:
+    """Block-sharded m=64 over 8 CPU host devices (clients_per_shard=8):
+    the sparse backend runs with 8x fewer devices than clients, and its
+    wire stays O(n_shards * boundary_degree) — gated in CI against the
+    dense O(m) arm. Results land under the ``block64`` key of
+    BENCH_gossip.json (same uploaded artifact)."""
+    m, shards = 64, 8
+    d = 16384 if smoke else 65536
+    iters = 5 if smoke else 20
+    res = _run_json_subprocess(
+        _BLOCK_SRC.format(m=m, shards=shards, d=d, iters=iters), shards)
+    # The O(boundary-degree) gate, asserted at the source: the block plan
+    # ships exactly the graph's block-boundary edges (no O(m) leak) and
+    # the realized q8 wire is far under the dense all-gather.
+    assert res["block_wire_lane_slots"] == res["boundary_directed_edges"], \
+        (res["block_wire_lane_slots"], res["boundary_directed_edges"])
+    assert res["wire_ratio_dense_over_block_b8"] >= 8.0, res
+    return res
+
+
 def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     """dense vs sparse on an edge-sampled schedule: HLO wire bytes (the
     O(m) all-gather vs O(degree) ppermute claim), wall clock, and the
@@ -140,18 +242,11 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     # two arms are within scheduler noise of each other on a CPU host.
     d = 16384 if smoke else 65536
     iters = 10 if smoke else 20
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                        f" --xla_force_host_platform_device_count={m}").strip()
-    env["PYTHONPATH"] = str(REPO / "src")
-    src = textwrap.dedent(_COMPARE_SRC).format(m=m, d=d, iters=iters)
-    r = subprocess.run([sys.executable, "-c", src], capture_output=True,
-                       text=True, timeout=900, env=env)
-    if r.returncode != 0:
-        raise RuntimeError(f"gossip compare subprocess failed:\n{r.stderr}")
-    payload = next(l for l in r.stdout.splitlines()
-                   if l.startswith("JSON::"))[len("JSON::"):]
-    res = json.loads(payload)
+    res = _run_json_subprocess(_COMPARE_SRC.format(m=m, d=d, iters=iters), m)
+    # Block-sharded arm: m=64 clients over the same 8 host devices
+    # (clients_per_shard=8) — m past the device count, wire gated at
+    # O(n_shards * boundary_degree).
+    res["block64"] = block_gossip_compare(smoke=smoke)
     GOSSIP_JSON.write_text(json.dumps(res, indent=2))
     rows = []
     for bits in (32, 8):
@@ -165,6 +260,17 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
             f"dense_us={dn['us_per_round']:.1f}|"
             f"billed_bits={sp['billed_bits_per_round']:.0f}|"
             f"realized_wire_bits={sp['realized_wire_bits']:.0f}"))
+    blk = res["block64"]
+    bsp, bdn = blk["sparse_b8"], blk["dense_b8"]
+    rows.append((
+        "gossip_block64_sparse_vs_dense_b8",
+        bsp["us_per_round"],
+        f"m={blk['m']}|shards={blk['n_shards']}|"
+        f"block_wireB={bsp['wire_bytes_per_device']:.0f}|"
+        f"dense_wireB={bdn['wire_bytes_per_device']:.0f}|"
+        f"ratio={blk['wire_ratio_dense_over_block_b8']:.2f}|"
+        f"boundary_lanes={blk['block_wire_lane_slots']}|"
+        f"realized_wire_bits={bsp['realized_wire_bits']:.0f}"))
     return rows
 
 

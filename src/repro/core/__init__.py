@@ -10,8 +10,9 @@ from .quantize import (QuantConfig, quantize, quantize_int, dequantize_int,  # n
                        dequantize_pytree, message_bits)
 from .local_sgd import local_train, heavy_ball_update  # noqa
 from .wire_layout import WireLayout  # noqa
-from .gossip_plan import (GossipPlan, plan_from_spec,  # noqa
-                          plan_from_support, plan_from_matrix)
+from .gossip_plan import (GossipPlan, BlockPlan, compile_block_plan,  # noqa
+                          plan_from_spec, plan_from_support,
+                          plan_from_matrix)
 from .mixing import (MixerConfig, make_mixer, make_scheduled_mixer,  # noqa
                      make_plan_mixer, make_event_mixer, mix_dense,
                      execute_plan_reference, consensus_distance)
@@ -20,7 +21,8 @@ from .dfedavgm import (DFedAvgMConfig, RoundState, init_round_state,  # noqa
 from .event_clock import SpeedModel, next_event  # noqa
 from .async_gossip import (AsyncConfig, AsyncRoundState,  # noqa
                            init_async_state, staleness_weights,
-                           make_async_round_step, make_async_engine)
+                           staleness_eta, make_async_round_step,
+                           make_async_engine)
 from .baselines import (FedAvgConfig, make_fedavg_step, DSGDConfig,  # noqa
                         make_dsgd_step)
 from .comm_cost import (CommLedger, dfedavgm_round_bits, fedavg_round_bits,  # noqa

@@ -62,7 +62,7 @@ Pytree = Any
 LossFn = Callable[..., jnp.ndarray]
 
 __all__ = ["AsyncConfig", "AsyncRoundState", "init_async_state",
-           "staleness_weights", "make_async_round_step",
+           "staleness_weights", "staleness_eta", "make_async_round_step",
            "make_async_engine"]
 
 # Salt folded into the model key to derive the independent clock-PRNG
@@ -83,12 +83,29 @@ class AsyncConfig:
                    "power" -> gamma**s. rho(0) == 1 exactly, so fresh
                    neighbors are never downweighted.
     gamma:         base of the "power" discount.
+    eta_staleness_decay:
+                   staleness-ADAPTIVE local learning rate: client i's
+                   local-SGD eta is scaled to ``eta / (1 + decay * lag_i)``
+                   with ``lag_i = max_j version[j] - version[i]`` (how many
+                   local rounds i trails the freshest client) — a lagging
+                   client's big catch-up gradient is damped instead of
+                   slamming stale parameters into the mix (cf. the
+                   staleness discount on the WEIGHTS, which this composes
+                   with). 0 disables; with zero lag (constant speed) the
+                   scale is exactly 1, so the sync-reproduction guarantee
+                   is untouched (see :func:`staleness_eta`). Caveat: the
+                   per-client eta is traced, which the fused Pallas
+                   momentum kernel cannot take (static eta) — with decay
+                   on, local SGD uses the plain XLA update, so a sync run
+                   built with ``fused_update`` matches to kernel-vs-XLA
+                   rounding (~ulp), not bitwise.
     """
 
     speed: SpeedModel = SpeedModel.constant()
     max_staleness: int = 8
     discount: str = "inverse"   # inverse | power
     gamma: float = 0.5
+    eta_staleness_decay: float = 0.0
 
     def __post_init__(self):
         if self.discount not in ("inverse", "power"):
@@ -98,6 +115,8 @@ class AsyncConfig:
             raise ValueError("max_staleness must be >= 0")
         if not 0.0 < self.gamma <= 1.0:
             raise ValueError("need 0 < gamma <= 1")
+        if self.eta_staleness_decay < 0.0:
+            raise ValueError("need eta_staleness_decay >= 0")
 
 
 class AsyncRoundState(NamedTuple):
@@ -164,6 +183,23 @@ def staleness_weights(W, version, ready, cfg: AsyncConfig) -> jnp.ndarray:
     return jnp.where(ready[:, None] > 0, W_eff, eye)
 
 
+def staleness_eta(eta: float, version, decay: float) -> jnp.ndarray:
+    """Per-client staleness-adaptive local learning rate [m]:
+
+        eta_i = eta / (1 + decay * lag_i),
+        lag_i = max_j version[j] - version[i]
+
+    A client ``lag_i`` local rounds behind the freshest trains with a
+    proportionally damped step, so its catch-up gradient (computed on
+    stale parameters) cannot overshoot when it finally mixes. ``lag == 0``
+    scales by exactly ``1/(1+0) == 1`` — under a constant speed model
+    every client stays at ``eta`` bit for bit, preserving the async ==
+    sync reproduction guarantee. ``decay == 0`` is the identity.
+    """
+    lag = (jnp.max(version) - version).astype(jnp.float32)
+    return jnp.float32(eta) / (1.0 + jnp.float32(decay) * lag)
+
+
 def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                           spec: MixingSpec | TopologySchedule,
                           async_cfg: AsyncConfig,
@@ -208,10 +244,27 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
 
         t_now, ready = next_event(state.next_ready)
 
-        train_one = lambda p, b, k: local_train(
-            loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
-            fused_update=fused_update)
-        z, losses = jax.vmap(train_one)(state.params, batches, client_keys)
+        if async_cfg.eta_staleness_decay > 0.0:
+            # Staleness-adaptive local LR: lagging clients train with a
+            # damped step (lag derived from the PRE-event versions; zero
+            # lag scales by exactly 1, keeping constant-speed runs bit-
+            # identical to the fixed-eta graph's values). The fused
+            # Pallas momentum kernel bakes eta in as a STATIC argument,
+            # so the per-client traced eta must take the plain XLA
+            # update instead.
+            etas = staleness_eta(cfg.eta, state.version,
+                                 async_cfg.eta_staleness_decay)
+            train_one = lambda p, b, k, e: local_train(
+                loss_fn, p, b, k, eta=e, theta=cfg.theta,
+                fused_update=None)
+            z, losses = jax.vmap(train_one)(state.params, batches,
+                                            client_keys, etas)
+        else:
+            train_one = lambda p, b, k: local_train(
+                loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
+                fused_update=fused_update)
+            z, losses = jax.vmap(train_one)(state.params, batches,
+                                            client_keys)
 
         if scheduled:
             W_t, active, key_q = spec.round_event(key_mix, state.round)

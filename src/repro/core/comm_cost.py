@@ -43,7 +43,8 @@ def schedule_round_bits(schedule: TopologySchedule, d: int,
 
 def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
                     count_lemma5_replicas: bool = False,
-                    t: int | None = None) -> float:
+                    t: int | None = None,
+                    clients_per_shard: int = 1) -> float:
     """REALIZED wire diagnostic for the sparse backend: one round of a
     compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
     ``message_bits`` across every directed *plan* edge — a static
@@ -67,17 +68,30 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
     ships each neighbor's 32-bit replica row alongside the packed words
     on a TPU mesh (a real edge network would keep neighbor replicas
     instead); True adds those 32*d bits per edge to the bill.
+
+    ``clients_per_shard``: > 1 bills the BLOCK-SHARDED realization
+    instead — only the plan's boundary lane slots touch the wire
+    (padded slots included; intra-block edges are on-device gathers and
+    cost nothing). For a contiguous-blocked ring this is O(n_shards *
+    boundary_degree) instead of O(m).
     """
     if isinstance(plan, (list, tuple)):
         plans = list(plan)
         if t is not None:
             plans = [plans[int(t) % len(plans)]]
-        return sum(plan_round_bits(p, d, quant, count_lemma5_replicas)
+        return sum(plan_round_bits(p, d, quant, count_lemma5_replicas,
+                                   clients_per_shard=clients_per_shard)
                    for p in plans) / len(plans)
     qc = quant if quant is not None else QuantConfig(bits=32)
     per_edge = message_bits(d, qc)
     if count_lemma5_replicas and qc.enabled and qc.delta_mode == "lemma5":
         per_edge += 32 * d
+    if clients_per_shard > 1:
+        if plan.m % clients_per_shard:
+            raise ValueError(f"clients_per_shard={clients_per_shard} "
+                             f"must divide m={plan.m}")
+        bp = plan.block_plan(plan.m // clients_per_shard)
+        return per_edge * bp.num_wire_lane_slots
     return per_edge * plan.num_directed_wire_edges
 
 

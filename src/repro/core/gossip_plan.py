@@ -28,6 +28,25 @@ Construction:
 Consumed by both backends in ``core.mixing``: the dense einsum via
 :meth:`GossipPlan.as_matrix` (reference semantics) and the sparse
 shard_map backend via :meth:`wire_pairs` / :meth:`gather_weights`.
+
+BLOCK SHARDING (m > device count): a plan can additionally be compiled
+for a mesh where each shard holds a CONTIGUOUS BLOCK of ``m_local``
+clients (client ``c`` lives on shard ``c // m_local``, local lane
+``c % m_local`` — exactly how jax shards a leading axis of size ``m``
+over ``n_shards`` devices). :meth:`GossipPlan.block_plan` partitions
+every step's edges into
+
+  * *intra-shard* moves — both endpoints on one shard, realized as an
+    on-device gather over the local lane axis: zero collectives, zero
+    wire bytes; and
+  * *inter-shard* boundary moves — realized as masked ``ppermute``
+    sub-steps at SHARD granularity, each carrying only the boundary
+    lanes that actually cross (a ``[width, ...]`` buffer, padded to the
+    widest pair of the sub-step).
+
+A contiguous-blocked ring therefore moves ONE boundary lane per
+direction per shard regardless of ``m`` — O(n_shards * boundary_degree)
+wire, not O(m).
 """
 from __future__ import annotations
 
@@ -35,9 +54,9 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["GossipPlan", "plan_from_spec", "plan_from_support",
-           "plan_from_matrix", "ring_steps", "torus_steps",
-           "matching_steps"]
+__all__ = ["GossipPlan", "BlockPlan", "BlockSubStep", "compile_block_plan",
+           "plan_from_spec", "plan_from_support", "plan_from_matrix",
+           "ring_steps", "torus_steps", "matching_steps"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +159,142 @@ class GossipPlan:
                 if j != i:
                     W[i, j] += w_steps[k, i]
         return W
+
+    def block_plan(self, n_shards: int) -> "BlockPlan":
+        """Compile this plan for a mesh of ``n_shards`` shards, each
+        holding a contiguous block of ``m // n_shards`` clients — see
+        :func:`compile_block_plan`."""
+        return compile_block_plan(self, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Block-sharded realization: m_local clients per shard
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSubStep:
+    """One shard-level ``ppermute`` of a plan step's boundary lanes.
+
+    pairs:      (src_shard, dst_shard) device pairs — a partial
+                permutation (each shard sends to at most one shard and
+                receives from at most one shard).
+    width:      lanes in the permuted buffer (the widest pair; narrower
+                pairs pad with lane 0 / drop on scatter).
+    send_lanes: [n_shards, width] int32 — local lanes shard s packs into
+                its send buffer (0-padded; non-senders pack lane 0 and
+                the collective discards it).
+    recv_lanes: [n_shards, width] int32 — destination local lane of each
+                received buffer row on shard s; ``m_local`` marks a
+                padded row (scattered with mode="drop").
+    """
+
+    pairs: tuple
+    width: int
+    send_lanes: np.ndarray
+    recv_lanes: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A :class:`GossipPlan` partitioned for block-sharded clients.
+
+    Step ``k``'s receive ``recv(i) = z(src[k, i])`` decomposes per shard
+    into an intra-shard lane gather (``intra_src``) plus zero or more
+    :class:`BlockSubStep` boundary ``ppermute``s; lanes a sub-step fills
+    overwrite the (identity) intra gather, and idle lanes keep weight 0,
+    so one weighted accumulation per step consumes both halves.
+
+    intra_src: [n_steps, n_shards, m_local] int32 — local source lane of
+               lane ``l`` on shard ``s`` (identity at inter-shard / idle
+               lanes).
+    substeps:  per-step tuples of :class:`BlockSubStep`.
+    """
+
+    m: int
+    n_shards: int
+    m_local: int
+    intra_src: np.ndarray
+    substeps: tuple
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.intra_src.shape[0])
+
+    @property
+    def num_wire_lane_slots(self) -> int:
+        """Total boundary lanes ONE round actually ships across shards —
+        ``sum_k sum_u width_u * len(pairs_u)`` (padded slots included).
+        The block-sharded analogue of ``num_directed_wire_edges``: for a
+        contiguous-blocked ring this is ``2 * n_shards`` regardless of
+        ``m``, the O(n_shards * boundary_degree) wire bound."""
+        return int(sum(sub.width * len(sub.pairs)
+                       for subs in self.substeps for sub in subs))
+
+    @property
+    def num_collectives(self) -> int:
+        """ppermute launches per round (len of every step's sub-step
+        list) — intra-shard traffic launches none."""
+        return int(sum(len(subs) for subs in self.substeps))
+
+
+def compile_block_plan(plan: GossipPlan, n_shards: int) -> BlockPlan:
+    """Partition ``plan`` for a mesh whose shard ``s`` holds the
+    contiguous client block ``[s * m_local, (s+1) * m_local)``.
+
+    Per step, inter-shard lanes are grouped by (src_shard, dst_shard)
+    pair and the pairs greedily colored into partial shard permutations
+    (each color = one masked ``ppermute``); pairs are seeded widest-first
+    so buffers of similar width share a launch and padding stays small.
+    Locality is free by construction: edges that stay inside a block
+    never touch the wire.
+    """
+    m = plan.m
+    if n_shards < 1 or m % n_shards:
+        raise ValueError(f"plan m={m} does not block over {n_shards} shards")
+    m_local = m // n_shards
+    intra = np.tile(np.arange(m_local, dtype=np.int32),
+                    (plan.n_steps, n_shards, 1))
+    all_substeps = []
+    for k in range(plan.n_steps):
+        by_pair: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        for i in range(m):
+            j = int(plan.src[k, i])
+            if j == i:
+                continue
+            s_dst, l_dst = divmod(i, m_local)
+            s_src, l_src = divmod(j, m_local)
+            if s_src == s_dst:
+                intra[k, s_dst, l_dst] = l_src
+            else:
+                by_pair.setdefault((s_src, s_dst), []).append((l_src, l_dst))
+        # Greedy color the shard-pair multigraph into partial permutations.
+        colors: list[dict] = []   # {pairs: {(s_src, s_dst): lanes}, src:set, dst:set}
+        for (s_src, s_dst), lanes in sorted(
+                by_pair.items(), key=lambda kv: -len(kv[1])):
+            for c in colors:
+                if s_src not in c["src"] and s_dst not in c["dst"]:
+                    break
+            else:
+                c = {"pairs": {}, "src": set(), "dst": set()}
+                colors.append(c)
+            c["pairs"][(s_src, s_dst)] = lanes
+            c["src"].add(s_src)
+            c["dst"].add(s_dst)
+        substeps = []
+        for c in colors:
+            width = max(len(v) for v in c["pairs"].values())
+            send = np.zeros((n_shards, width), np.int32)
+            recv = np.full((n_shards, width), m_local, np.int32)  # drop
+            for (s_src, s_dst), lanes in c["pairs"].items():
+                for b, (l_src, l_dst) in enumerate(lanes):
+                    send[s_src, b] = l_src
+                    recv[s_dst, b] = l_dst
+            substeps.append(BlockSubStep(
+                pairs=tuple(sorted(c["pairs"])), width=width,
+                send_lanes=send, recv_lanes=recv))
+        all_substeps.append(tuple(substeps))
+    return BlockPlan(m=m, n_shards=n_shards, m_local=m_local,
+                     intra_src=intra, substeps=tuple(all_substeps))
 
 
 # ---------------------------------------------------------------------------

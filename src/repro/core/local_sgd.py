@@ -31,8 +31,13 @@ def heavy_ball_update(y: Pytree, v: Pytree, g: Pytree, eta: float,
     if fused_fn is not None:
         return fused_fn(y, v, g, eta, theta)
 
+    # The trailing cast is a no-op for python-float eta/theta (weak-typed
+    # arithmetic already lands in vl.dtype) but keeps the buffer dtype
+    # when eta is a TRACED f32 scalar (the async engine's staleness-
+    # adaptive per-client learning rate) and vl is lower precision.
     v_next = jax.tree.map(
-        lambda vl, gl: theta * vl - eta * gl.astype(vl.dtype), v, g)
+        lambda vl, gl: (theta * vl - eta * gl.astype(vl.dtype))
+        .astype(vl.dtype), v, g)
     y_next = jax.tree.map(jnp.add, y, v_next)
     return y_next, v_next
 

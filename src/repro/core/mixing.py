@@ -16,11 +16,17 @@ lower through one plan/compile/execute pipeline:
     pjit with the client axis sharded, XLA lowers this to an m-way
     all-gather. Works for ANY mixing matrix; this is the reference.
 
-  * ``sparse`` — a ``shard_map`` (one client per shard) that realizes the
-    plan as *masked* ``ppermute`` steps: O(degree) neighbor traffic per
-    round regardless of how ``W_t`` was sampled. Edges a round did not
-    sample get weight 0 — the wire schedule is static (compile once),
-    the mask is the round's realized topology.
+  * ``sparse`` — a ``shard_map`` that realizes the plan as *masked*
+    ``ppermute`` steps: O(degree) neighbor traffic per round regardless
+    of how ``W_t`` was sampled. Edges a round did not sample get weight
+    0 — the wire schedule is static (compile once), the mask is the
+    round's realized topology. Each shard holds a CONTIGUOUS BLOCK of
+    ``m_local = m / n_shards`` clients (``m_local == 1`` is the classic
+    one-client-per-shard layout); with ``m_local > 1`` the compiled
+    :class:`~repro.core.gossip_plan.BlockPlan` turns intra-block edges
+    into on-device lane gathers (zero wire) and ships only the
+    boundary lanes through shard-level ppermutes, so ``m`` scales past
+    the device count at O(n_shards * boundary_degree) wire bytes.
 
 ``ring`` and ``torus`` impls are thin plan instances of the sparse
 backend (their shift decompositions map 1:1 onto ICI links).
@@ -71,15 +77,21 @@ _IMPLS = ("auto", "dense", "ring", "torus", "sparse")
 _WIRES = ("auto", "seq", "planar")
 
 
-def _one_client_per_shard(mesh, client_axes: Sequence[str], m: int) -> bool:
-    """The sparse backend maps each client onto one mesh shard; True iff
-    ``mesh``'s client axes multiply out to exactly ``m``."""
+def _clients_per_shard(mesh, client_axes: Sequence[str], m: int) -> int | None:
+    """The sparse backend maps a CONTIGUOUS BLOCK of ``m_local`` clients
+    onto each mesh shard (``m = n_shards * m_local`` — the layout jax's
+    leading-axis sharding produces). Returns ``m_local`` when ``mesh``'s
+    client axes multiply out to a divisor of ``m`` (1 = the classic
+    one-client-per-shard layout), else None (mesh unusable)."""
     if mesh is None or not client_axes:
-        return False
+        return None
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     if any(a not in sizes for a in client_axes):
-        return False
-    return int(np.prod([sizes[a] for a in client_axes])) == m
+        return None
+    n_shards = int(np.prod([sizes[a] for a in client_axes]))
+    if n_shards < 1 or m % n_shards:
+        return None
+    return m // n_shards
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,10 +102,13 @@ class MixerConfig:
            "dense" is the einsum reference (any W, all-gather traffic);
            "sparse" executes the compiled GossipPlan as masked ppermutes
            (any bounded-degree topology, incl. time-varying schedules;
-           needs a mesh with one client per shard); "ring"/"torus" are
-           the plan instances for those static specs; "auto" picks a
-           sparse realization when the mesh fits (except for complete
-           graphs, where the all-gather is optimal), else "dense".
+           needs a mesh whose client axes multiply to a divisor of m —
+           each shard carries a contiguous block of m_local clients,
+           m_local == 1 being the classic one-client-per-shard layout);
+           "ring"/"torus" are the plan instances for those static specs;
+           "auto" picks a sparse realization when the mesh fits (except
+           for complete graphs, where the all-gather is optimal), else
+           "dense".
     quant: None disables Algorithm 2; a QuantConfig moves packed uint32
            wire words through the collectives.
     wire:  quantized-sparse wire codec backend. Both run the same flat
@@ -123,7 +138,14 @@ class MixerConfig:
                       client_axes: Sequence[str] = ("clients",)) -> str:
         if self.impl != "auto":
             return self.impl
-        if _one_client_per_shard(mesh, client_axes, spec.m):
+        # Any mesh whose shard count divides m fits: each shard carries a
+        # block of m_local clients (m_local == 1 is the classic layout).
+        # A mesh with matching client axes is treated as deliberate
+        # opt-in — make_client_mesh only ever builds exact-fit meshes, so
+        # auto cannot trip this on a mesh built for something else; and
+        # even at large m_local the block realization moves only boundary
+        # lanes where dense all-gathers the whole O(m) stacked axis.
+        if _clients_per_shard(mesh, client_axes, spec.m) is not None:
             if isinstance(spec, TopologySchedule):
                 return "sparse"
             if spec.kind in ("ring", "torus"):
@@ -336,12 +358,25 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
     u32 stream tail; the ``lemma5`` recursion additionally bitcasts the
     f32 replica buffer into the same stream, so every mode stays at one
     collective launch per plan step.
+
+    BLOCK SHARDING: when the mesh has fewer shards than clients (each
+    shard a contiguous block of ``m_local = m / n_shards`` clients, the
+    layout jax's leading-axis sharding produces), the plan is compiled to
+    a :class:`~repro.core.gossip_plan.BlockPlan` and the body switches to
+    the block realization — intra-block edges become on-device lane
+    gathers (zero wire), boundary edges become shard-level masked
+    ppermute sub-steps carrying only the crossing lanes.
     """
     ca = tuple(client_axes)
-    if not _one_client_per_shard(mesh, ca, plan.m):
+    m_local = _clients_per_shard(mesh, ca, plan.m)
+    if m_local is None:
         raise ValueError(
-            f"sparse mixer needs a mesh with one client per shard: plan "
-            f"has m={plan.m}, mesh axes {ca!r} don't multiply to it")
+            f"sparse mixer needs a mesh carrying a client block per "
+            f"shard: plan has m={plan.m}, mesh axes {ca!r} must multiply "
+            f"to a divisor of it")
+    if m_local > 1:
+        return _make_block_exec(plan, mesh, ca, param_specs, quant,
+                                wire=wire, m_local=m_local)
     axis = ca[0] if len(ca) == 1 else ca
     pairs = [plan.wire_pairs(k) for k in range(plan.n_steps)]
     live = [k for k in range(plan.n_steps) if pairs[k]]
@@ -426,6 +461,144 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
                                  (1, 0, 2))                # [m, nl, 2]
         else:
             keys = jnp.zeros((m, 1, 2), jnp.uint32)
+        smap = _shard_map_no_repcheck if pallas else (
+            lambda b, mesh, in_specs, out_specs: _shard_map(
+                b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+        fn = smap(q_body, mesh=mesh,
+                  in_specs=(specs, specs, P(ca, None, None)) + w_specs,
+                  out_specs=specs)
+        return fn(x, z, keys, jnp.asarray(wself, jnp.float32),
+                  jnp.asarray(wsteps, jnp.float32))
+
+    return ex
+
+
+def _make_block_exec(plan: GossipPlan, mesh, ca: Sequence[str],
+                     param_specs: Pytree | None,
+                     quant: QuantConfig | None,
+                     wire: str, m_local: int) -> Callable:
+    """Block-sharded sparse exec: each shard holds a CONTIGUOUS block of
+    ``m_local`` clients (lane axis), ``m = n_shards * m_local``.
+
+    Same exec(x, z, w_self, w_steps, key) -> x' contract as the
+    one-client-per-shard bodies, but each plan step is realized from the
+    compiled :class:`~repro.core.gossip_plan.BlockPlan`:
+
+      * intra-shard edges — a lane gather over the local block (the
+        shard-specific index row is selected with ``axis_index``; no
+        collective, no wire bytes);
+      * boundary edges — the step's :class:`BlockSubStep` ppermutes,
+        each moving a ``[width, ...]`` buffer of just the crossing lanes
+        (scattered back over the intra gather; padded rows drop).
+
+    A contiguous-blocked ring ships ONE lane per direction per shard —
+    O(n_shards * boundary_degree) wire bytes instead of O(m). Encode /
+    decode run batched over the lane axis, so the wire words and scales
+    stay bit-identical to the mesh-free reference (elementwise ops); the
+    fused float accumulation is a few-ulp match, same as the m_local=1
+    body (XLA picks FMA contraction per module).
+    """
+    n_shards = plan.m // m_local
+    bp = plan.block_plan(n_shards)
+    axis = ca[0] if len(ca) == 1 else ca
+    live = [k for k in range(plan.n_steps) if plan.wire_pairs(k)]
+    w_specs = (P(ca), P(None, ca))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    intra_t = {k: jnp.asarray(bp.intra_src[k]) for k in live}
+    sub_t = {k: [(sub, jnp.asarray(sub.send_lanes),
+                  jnp.asarray(sub.recv_lanes)) for sub in bp.substeps[k]]
+             for k in live}
+
+    def sid():
+        idx = jax.lax.axis_index(ca[0])
+        for a in ca[1:]:
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+        return idx
+
+    def recv_rows(rows, k, s):
+        """Step k's receive for this shard: rows [m_local, ...] (any
+        per-lane payload — f32 rows or packed u32 streams) -> what each
+        lane receives. Intra lanes gather locally; boundary lanes arrive
+        via the sub-step ppermutes and overwrite the identity gather."""
+        out = rows[intra_t[k][s]]
+        for sub, send, recv in sub_t[k]:
+            got = jax.lax.ppermute(rows[send[s]], axis, sub.pairs)
+            out = out.at[recv[s]].set(got, mode="drop")
+        return out
+
+    if quant is None or not quant.enabled:
+
+        def body(z_blocks, wself, wsteps):
+            s = sid()
+            layout = WireLayout.for_tree(
+                jax.tree.map(lambda a: a[0], z_blocks))
+            rows = jax.vmap(layout.flatten_f32)(z_blocks)  # [m_local, n]
+            acc = wself[:, None] * rows
+            for k in live:
+                acc = acc + wsteps[k][:, None] * recv_rows(rows, k, s)
+            return jax.vmap(layout.unflatten)(acc)
+
+        def ex(x, z, wself, wsteps, key=None):
+            del x, key
+            specs = _full_specs(z, ca, param_specs)
+            fn = _shard_map(body, mesh=mesh,
+                            in_specs=(specs,) + w_specs, out_specs=specs)
+            return fn(z, jnp.asarray(wself, jnp.float32),
+                      jnp.asarray(wsteps, jnp.float32))
+
+        return ex
+
+    lemma5 = quant.delta_mode == "lemma5"
+    pallas = _pallas_wire(wire)
+
+    def q_body(x_blocks, z_blocks, keys_blk, wself, wsteps):
+        s = sid()
+        layout = WireLayout.for_tree(jax.tree.map(lambda a: a[0], x_blocks),
+                                     bits=quant.bits)
+        nl, W = layout.n_leaves, layout.total_words
+        x2d = layout.to_planar_stacked(x_blocks)      # [m_local, per, W]
+        # Leaf-dtype subtraction before the f32 cast — the dense
+        # reference's (z - x).astype(f32) semantics.
+        delta = layout.to_planar_stacked(jax.tree.map(
+            lambda zl, xl: zl - xl, z_blocks, x_blocks))
+        scales = layout.leaf_scales(delta, quant)     # [m_local, n_leaves]
+        leaf_keys = (jnp.transpose(keys_blk, (1, 0, 2))
+                     if quant.stochastic else None)   # [nl, m_local, 2]
+        words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys,
+                              pallas=pallas)          # [m_local, W]
+        tail = [jax.lax.bitcast_convert_type(scales, jnp.uint32)]
+        if lemma5:
+            tail.append(jax.lax.bitcast_convert_type(
+                x2d.reshape(m_local, -1), jnp.uint32))
+        stream = jnp.concatenate([words] + tail, axis=1)  # [m_local, L]
+        streams, wlist = [stream], [wself]
+        for k in live:
+            streams.append(recv_rows(stream, k, s))
+            wlist.append(wsteps[k])
+        S = jnp.stack(streams, axis=1)                # [m_local, K, L] u32
+        weights = jnp.stack(wlist, axis=1)            # [m_local, K]
+        words_all = S[..., :W]
+        scales_all = jax.lax.bitcast_convert_type(
+            S[..., W:W + nl], jnp.float32)            # [m_local, K, nl]
+        if lemma5:
+            xs = jax.lax.bitcast_convert_type(
+                S[..., W + nl:], jnp.float32).reshape(
+                    m_local, -1, layout.per, W)
+            base = _weighted_replica_base(xs, weights)
+        else:
+            base = x2d
+        out = layout.decode_apply(base, words_all, scales_all, weights,
+                                  quant, pallas=pallas)
+        return layout.from_planar_stacked(out)
+
+    def ex(x, z, wself, wsteps, key):
+        specs = _full_specs(x, ca, param_specs)
+        n_leaves = len(jax.tree.leaves(x))
+        if quant.stochastic:
+            keys = jnp.transpose(_quant_leaf_keys(key, n_leaves, plan.m),
+                                 (1, 0, 2))           # [m, nl, 2]
+        else:
+            keys = jnp.zeros((plan.m, 1, 2), jnp.uint32)
         smap = _shard_map_no_repcheck if pallas else (
             lambda b, mesh, in_specs, out_specs: _shard_map(
                 b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
@@ -663,24 +836,26 @@ def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
         impl = "torus"  # historical alias: ring impl on a torus spec
 
     if impl in ("ring", "torus", "sparse"):
-        if not _one_client_per_shard(mesh, client_axes, spec.m):
+        if _clients_per_shard(mesh, client_axes, spec.m) is None:
             if impl == "torus" and quant is not None and quant.enabled:
                 # Explicitly requested quantized torus without a usable
                 # mesh: fall back to the dense reference — LOUDLY (this
                 # used to happen silently).
                 warnings.warn(
-                    "quantized torus mixer without a one-client-per-shard "
-                    "mesh falls back to the DENSE reference path (all-"
-                    "gather traffic, not 4 ppermutes); pass a mesh whose "
-                    "client axes multiply to m for the sparse backend",
+                    "quantized torus mixer without a usable client mesh "
+                    "falls back to the DENSE reference path (all-gather "
+                    "traffic, not 4 ppermutes); pass a mesh whose client "
+                    "axes multiply to a divisor of m (a client block per "
+                    "shard) for the sparse backend",
                     UserWarning, stacklevel=2)
 
                 def mixer(x, z, key=None, t=None):
                     return _mix_dense_quantized(spec.W, x, z, quant, key)
                 return mixer
             raise ValueError(
-                f"mixer impl {impl!r} needs a mesh with one client per "
-                f"shard (m={spec.m}, client_axes={tuple(client_axes)!r})")
+                f"mixer impl {impl!r} needs a mesh with one client block "
+                f"per shard (m={spec.m}, "
+                f"client_axes={tuple(client_axes)!r})")
         if impl != "sparse" and spec.kind != impl:
             raise ValueError(f"{impl} mixer needs a {impl} MixingSpec, "
                              f"got kind={spec.kind!r}")

@@ -101,12 +101,25 @@ class QuantConfig:
         return 32 // self.bits
 
 
+def scale_from_amax(amax: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """THE per-tensor quantizer step: ``s = amax / qmax`` computed as a
+    multiply by the host-side f32 reciprocal. XLA may lower a runtime
+    divide-by-constant as either an IEEE division or a reciprocal
+    multiply DEPENDING ON THE MODULE (observed 1-ulp divergence between
+    the shard_map mesh body and the mesh-free reference), and a 1-ulp
+    scale difference can flip a quantization decision at a grid boundary.
+    A multiply is correctly rounded and rewrite-proof, so every backend
+    derives bit-identical scales — which is why this expression lives in
+    exactly one place (``wire_layout.leaf_scales`` shares it)."""
+    return amax * np.float32(1.0 / np.float32(qmax))
+
+
 def _scale_for(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
     if cfg.scale_mode == "fixed":
         return jnp.asarray(cfg.s, dtype=jnp.float32)
-    # per-tensor: grid must cover [-max|x|, max|x|] -> s = max|x| / (qmax)
+    # per-tensor: grid must cover [-max|x|, max|x|] -> s = max|x| / qmax
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    s = amax / cfg.qmax
+    s = scale_from_amax(amax, cfg.qmax)
     # Avoid s == 0 on an all-zero tensor (q would be 0 anyway).
     return jnp.where(s > 0, s, jnp.float32(1.0))
 

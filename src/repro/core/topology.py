@@ -78,6 +78,20 @@ class Graph:
         """sum_i deg(i) — what the paper's comm-cost formulas count."""
         return int(self.adj.sum())
 
+    def block_boundary_edges(self, clients_per_shard: int) -> int:
+        """Directed edges that CROSS a contiguous client-block boundary
+        when client ``c`` lives on shard ``c // clients_per_shard`` — the
+        only edges the block-sharded sparse backend ships over the wire
+        (intra-block edges are on-device lane gathers). For a ring this
+        is ``2 * n_shards`` regardless of ``m``: the O(n_shards *
+        boundary_degree) scaling that lets ``m`` grow past the device
+        count."""
+        if clients_per_shard < 1 or self.m % clients_per_shard:
+            raise ValueError(f"clients_per_shard={clients_per_shard} "
+                             f"must divide m={self.m}")
+        shard = np.arange(self.m) // clients_per_shard
+        return int((self.adj & (shard[:, None] != shard[None, :])).sum())
+
     def is_connected(self) -> bool:
         m = self.m
         seen = np.zeros(m, dtype=bool)

@@ -184,11 +184,12 @@ class WireLayout:
         if quant.scale_mode == "fixed":
             batch = delta.shape[:-2]
             return jnp.full(batch + (self.n_leaves,), quant.s, jnp.float32)
+        from .quantize import scale_from_amax
         ss = []
         for lw, off in zip(self.leaf_words, self.word_offsets):
             amax = jnp.max(jnp.abs(delta[..., :, off:off + lw]),
                            axis=(-2, -1))
-            s = amax / quant.qmax
+            s = scale_from_amax(amax, quant.qmax)
             ss.append(jnp.where(s > 0, s, jnp.float32(1.0)))
         return jnp.stack(ss, axis=-1)
 
@@ -245,6 +246,17 @@ class WireLayout:
             from ..kernels.ops import default_interpret
             from ..kernels.quantize_pack import quantize_pack_buffer_pallas
             nz = noise if noise is not None else jnp.zeros_like(delta)
+            if delta.ndim == 3:
+                # Block-sharded lane axis: lax.map one kernel launch per
+                # local client at the m_local == 1 shapes — the HLO
+                # carries ONE traced body regardless of m_local (a
+                # Python unroll would trace m_local copies).
+                return jax.lax.map(
+                    lambda a: quantize_pack_buffer_pallas(
+                        a[0], a[1].reshape(1, -1), a[2], bits=quant.bits,
+                        stochastic=stochastic,
+                        interpret=default_interpret()),
+                    (delta, sblk, nz))
             return quantize_pack_buffer_pallas(
                 delta, sblk.reshape(1, -1), nz, bits=quant.bits,
                 stochastic=stochastic, interpret=default_interpret())
@@ -261,6 +273,14 @@ class WireLayout:
         if pallas:
             from ..kernels.dequant_mix import dequant_mix_buffer_pallas
             from ..kernels.ops import default_interpret
+            if base.ndim == 3:
+                # Block-sharded lane axis: one traced per-lane kernel
+                # body via lax.map (see encode above).
+                return jax.lax.map(
+                    lambda a: dequant_mix_buffer_pallas(
+                        a[0], a[1], a[2], a[3], bits=quant.bits,
+                        interpret=default_interpret()),
+                    (base, streams, sblk, weights))
             return dequant_mix_buffer_pallas(
                 base, streams, sblk, weights, bits=quant.bits,
                 interpret=default_interpret())

@@ -35,19 +35,46 @@ def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes, **auto_axis_types_kw(len(axes)))
 
 
-def make_client_mesh(m: int, axis: str = "clients"):
-    """1-D mesh with ONE CLIENT PER DEVICE over the first ``m`` local
-    devices — the layout the sparse GossipPlan backend requires — or
-    ``None`` when the host has fewer than ``m`` devices (callers fall
-    back to the dense mixer). Uses ``jax.sharding.Mesh`` directly so it
-    works on jax releases without ``jax.make_mesh``."""
+# (m, clients_per_shard) combinations already warned about — the dense
+# fallback is worth exactly one loud line per shape, not one per round.
+_FALLBACK_WARNED: set = set()
+
+
+def make_client_mesh(m: int, axis: str = "clients",
+                     clients_per_shard: int = 1):
+    """1-D client mesh for the sparse GossipPlan backend: each of the
+    ``m // clients_per_shard`` device shards holds a CONTIGUOUS BLOCK of
+    ``clients_per_shard`` clients (``clients_per_shard=1`` is the classic
+    one-client-per-device layout). Returns ``None`` when the host has too
+    few devices — with a ONE-TIME warning naming the dense fallback and
+    the flags that control it (this used to happen silently). Uses
+    ``jax.sharding.Mesh`` directly so it works on jax releases without
+    ``jax.make_mesh``."""
+    import warnings
+
     import numpy as np
     from jax.sharding import Mesh
 
+    if clients_per_shard < 1 or m % clients_per_shard:
+        raise ValueError(
+            f"clients_per_shard={clients_per_shard} must divide m={m}")
+    n_shards = m // clients_per_shard
     devs = jax.devices()
-    if len(devs) < m:
+    if len(devs) < n_shards:
+        key = (m, clients_per_shard)
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            warnings.warn(
+                f"make_client_mesh: m={m} clients at clients_per_shard="
+                f"{clients_per_shard} needs {n_shards} device shards but "
+                f"this host has {len(devs)}; returning None, so callers "
+                f"FALL BACK TO THE DENSE MIXER (all-gather traffic, not "
+                f"O(degree) ppermutes). Raise --clients-per-shard so that "
+                f"m/clients_per_shard <= {len(devs)}, or pass "
+                f"--mixer-impl dense to make the fallback explicit.",
+                UserWarning, stacklevel=2)
         return None
-    return Mesh(np.array(devs[:m]), (axis,))
+    return Mesh(np.array(devs[:n_shards]), (axis,))
 
 
 # v5e hardware constants for the roofline analysis (per chip / per link)

@@ -77,7 +77,14 @@ def main(argv=None):
                     choices=["auto", "dense", "sparse"],
                     help="gossip backend: dense einsum vs sparse GossipPlan"
                          " ppermutes; auto picks sparse when this host has"
-                         " >= one device per client")
+                         " >= one device per client BLOCK (see"
+                         " --clients-per-shard)")
+    ap.add_argument("--clients-per-shard", type=int, default=1,
+                    help="clients per device shard for the sparse backend "
+                         "(must divide --clients). >1 block-shards the "
+                         "client axis so m scales past the device count: "
+                         "intra-block gossip edges are on-device gathers, "
+                         "only boundary lanes touch the wire")
     ap.add_argument("--wire", default="auto",
                     choices=["auto", "seq", "planar"],
                     help="flat wire-buffer codec for the sparse mixer: "
@@ -120,6 +127,10 @@ def main(argv=None):
     ap.add_argument("--max-staleness", type=int, default=8,
                     help="neighbors staler than this many local rounds "
                          "get mixing weight 0 (--async-gossip)")
+    ap.add_argument("--eta-staleness-decay", type=float, default=0.0,
+                    help="staleness-adaptive local LR (--async-gossip): "
+                         "a client lagging s local rounds trains with "
+                         "eta/(1+decay*s); 0 disables")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="save RoundState every --ckpt-every rounds")
@@ -135,15 +146,24 @@ def main(argv=None):
     quant = QuantConfig(bits=args.bits) if args.bits < 32 else None
     spec = build_topology(args, m)
 
-    # Backend selection: sparse needs a one-client-per-shard mesh.
+    # Backend selection: sparse needs a mesh with one client BLOCK per
+    # shard (clients_per_shard=1 is the classic one-client-per-device
+    # layout; >1 lets m exceed the device count).
     mesh = client_axes = None
     if args.mixer_impl in ("auto", "sparse"):
         from .mesh import make_client_mesh
-        mesh = make_client_mesh(m)
+        if args.clients_per_shard < 1 or m % args.clients_per_shard:
+            raise SystemExit(f"--clients-per-shard {args.clients_per_shard} "
+                             f"must be >= 1 and divide --clients {m}")
+        mesh = make_client_mesh(m,
+                                clients_per_shard=args.clients_per_shard)
         if mesh is None and args.mixer_impl == "sparse":
-            raise SystemExit(f"--mixer-impl sparse needs >= {m} devices "
-                             f"(one per client), this host has "
-                             f"{jax.device_count()}")
+            raise SystemExit(
+                f"--mixer-impl sparse needs >= "
+                f"{m // args.clients_per_shard} devices "
+                f"(one per block of {args.clients_per_shard} clients), "
+                f"this host has {jax.device_count()}; raise "
+                f"--clients-per-shard to fit")
     impl = "sparse" if mesh is not None else "dense"
     client_axes = ("clients",) if mesh is not None else ()
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
@@ -161,9 +181,17 @@ def main(argv=None):
               f"(E[directed edges/round] = {spec.expected_directed_edges():.1f})")
     if plan is not None:
         for p in (plan if isinstance(plan, list) else [plan]):
-            print(f"mixer backend: sparse ({p.name}: {p.n_steps} ppermute "
-                  f"steps, {p.num_directed_wire_edges} realized wire edges "
-                  f"per round)")
+            if args.clients_per_shard > 1:
+                bp = p.block_plan(m // args.clients_per_shard)
+                print(f"mixer backend: sparse ({p.name}: "
+                      f"{args.clients_per_shard} clients/shard over "
+                      f"{bp.n_shards} shards, {bp.num_collectives} "
+                      f"ppermutes, {bp.num_wire_lane_slots} boundary wire "
+                      f"lanes per round)")
+            else:
+                print(f"mixer backend: sparse ({p.name}: {p.n_steps} "
+                      f"ppermute steps, {p.num_directed_wire_edges} "
+                      f"realized wire edges per round)")
     else:
         print("mixer backend: dense (einsum reference)")
 
@@ -179,9 +207,12 @@ def main(argv=None):
         speed = {"constant": SpeedModel.constant(),
                  "lognormal": SpeedModel.lognormal(),
                  "straggler": SpeedModel.straggler()}[args.speed_model]
-        acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness)
+        acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness,
+                           eta_staleness_decay=args.eta_staleness_decay)
         print(f"async gossip: speed={args.speed_model} "
-              f"max_staleness={args.max_staleness} (rounds are EVENTS)")
+              f"max_staleness={args.max_staleness} "
+              f"eta_staleness_decay={args.eta_staleness_decay} "
+              f"(rounds are EVENTS)")
     # Donating the round state lets XLA reuse the params/momentum HBM in
     # place instead of round-tripping a fresh copy every round (a no-op
     # warning on CPU, a real saving on device).

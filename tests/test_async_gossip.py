@@ -28,7 +28,7 @@ from repro.core import (AsyncConfig, DFedAvgMConfig, MixingSpec, QuantConfig,
                         SpeedModel, TopologySchedule, async_event_bits,
                         init_async_state, init_round_state, make_async_engine,
                         make_round_step, next_event, plan_round_bits,
-                        staleness_weights)
+                        staleness_eta, staleness_weights)
 from repro.core.comm_cost import CommLedger
 from repro.core.topology import Graph, ring_graph
 
@@ -155,6 +155,106 @@ def test_no_staleness_is_bitwise_identity():
     We = staleness_weights(W, jnp.full((M,), 3, jnp.int32),
                            jnp.ones((M,), jnp.float32), cfg)
     np.testing.assert_array_equal(np.asarray(We), np.asarray(W))
+
+
+# ---------------------------------------------------------------------------
+# Staleness-adaptive local learning rate (eta_staleness_decay)
+# ---------------------------------------------------------------------------
+
+def test_staleness_eta_scales_by_lag():
+    """Laggards train with a damped step: eta_i = eta/(1+decay*lag_i);
+    fresh clients keep EXACTLY eta (lag 0 -> divide by exactly 1), and
+    decay=0 is the identity for any version pattern."""
+    version = jnp.asarray([5, 5, 3, 0], jnp.int32)
+    etas = np.asarray(staleness_eta(0.1, version, 0.5))
+    np.testing.assert_allclose(
+        etas, [0.1, 0.1, 0.1 / 2.0, 0.1 / 3.5], rtol=1e-6)
+    assert etas[0] == np.float32(0.1)            # lag 0: bitwise eta
+    assert (np.asarray(staleness_eta(0.1, version, 0.0))
+            == np.float32(0.1)).all()
+    # monotone: more lag, (weakly) smaller step
+    assert (np.diff(etas[1:]) < 0).all()
+
+
+def test_eta_decay_keeps_event_rows_stochastic():
+    """The eta adaptation must compose with the staleness WEIGHT
+    discount without touching it: enabling the decay leaves W_eff
+    BITWISE unchanged (it only scales local training steps), and the
+    rows stay stochastic with non-negative entries."""
+    W = jnp.asarray(MixingSpec.ring(M, self_weight=0.5).W, jnp.float32)
+    version = jnp.asarray([9, 2, 5, 0, 7, 7, 1, 4], jnp.int32)
+    ready = jnp.ones((M,), jnp.float32)
+    We_off = np.asarray(staleness_weights(
+        W, version, ready, AsyncConfig(max_staleness=4)))
+    We_on = np.asarray(staleness_weights(
+        W, version, ready,
+        AsyncConfig(max_staleness=4, eta_staleness_decay=0.7)))
+    np.testing.assert_array_equal(We_on, We_off)
+    np.testing.assert_allclose(We_on.sum(axis=1), 1.0, atol=1e-6)
+    assert (We_on >= -1e-7).all()
+
+
+def test_eta_decay_constant_speed_still_bit_identical_to_sync():
+    """Zero lag scales eta by exactly 1: a constant-speed async run WITH
+    the decay enabled reproduces the synchronous round step bit for bit
+    (the adaptive-eta graph computes eta/(1+decay*0) == eta)."""
+    _, loss_fn, batches = quad_problem()
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    acfg = AsyncConfig(speed=SpeedModel.constant(), eta_staleness_decay=0.9)
+    sched = TopologySchedule.edge_sample(ring_graph(M), 0.6)
+    step_s = jax.jit(make_round_step(loss_fn, cfg, sched))
+    step_a = jax.jit(make_round_step(loss_fn, cfg, sched, async_cfg=acfg))
+    st_s = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(7))
+    st_a = init_async_state({"w": jnp.zeros((M, D))},
+                            jax.random.PRNGKey(7), acfg.speed)
+    for _ in range(4):
+        st_s, _ = step_s(st_s, batches)
+        st_a, _ = step_a(st_a, batches)
+    np.testing.assert_array_equal(np.asarray(st_s.params["w"]),
+                                  np.asarray(st_a.params["w"]))
+
+
+def test_eta_decay_works_with_fused_momentum_update():
+    """The per-client adaptive eta is a TRACED scalar, which the fused
+    Pallas momentum kernel cannot take (its eta is a static jit arg) —
+    the decay branch must fall back to the plain XLA update instead of
+    crashing."""
+    from repro.kernels.ops import make_fused_momentum_update
+    _, loss_fn, batches = quad_problem()
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    acfg = AsyncConfig(speed=SpeedModel.straggler(factor=4.0),
+                       eta_staleness_decay=0.1)
+    step = jax.jit(make_round_step(
+        loss_fn, cfg, MixingSpec.ring(M, self_weight=0.5), async_cfg=acfg,
+        fused_update=make_fused_momentum_update()))
+    st = init_async_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(0),
+                          acfg.speed)
+    for _ in range(3):
+        st, mt = step(st, batches)
+    assert np.isfinite(np.asarray(st.params["w"])).all()
+
+
+def test_eta_decay_damps_stragglers():
+    """Under a straggler tail the adaptive eta changes the trajectory
+    (laggards really do train smaller steps) while staying finite, and
+    the config validates."""
+    _, loss_fn, batches = quad_problem()
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    runs = {}
+    for decay in (0.0, 1.0):
+        acfg = AsyncConfig(speed=SpeedModel.straggler(factor=10.0),
+                           max_staleness=6, eta_staleness_decay=decay)
+        step = jax.jit(make_round_step(loss_fn, cfg, spec, async_cfg=acfg))
+        st = init_async_state({"w": jnp.zeros((M, D))},
+                              jax.random.PRNGKey(5), acfg.speed)
+        for _ in range(2 * M):
+            st, _ = step(st, batches)
+        runs[decay] = np.asarray(st.params["w"])
+        assert np.isfinite(runs[decay]).all()
+    assert not np.array_equal(runs[0.0], runs[1.0])
+    with pytest.raises(ValueError, match="eta_staleness_decay"):
+        AsyncConfig(eta_staleness_decay=-0.1)
 
 
 # ---------------------------------------------------------------------------

@@ -203,10 +203,116 @@ def test_planar_wire_supports_every_quant_mode():
 
 
 def test_unquantized_sparse_impls_require_mesh():
-    with pytest.raises(ValueError, match="one client per shard"):
+    with pytest.raises(ValueError, match="one client block per shard"):
         make_mixer(MixingSpec.ring(M), MixerConfig(impl="ring"), mesh=None)
-    with pytest.raises(ValueError, match="one client per shard"):
+    with pytest.raises(ValueError, match="one client block per shard"):
         make_mixer(MixingSpec.ring(M), MixerConfig(impl="sparse"), mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Block-sharded compilation: m_local clients per shard
+# ---------------------------------------------------------------------------
+
+def _simulate_block_step(bp, k, rows):
+    """Numpy emulation of one block-plan step on per-client payload rows
+    [m, n]: intra gathers + per-sub-step ppermute/scatter — exactly what
+    the shard_map body executes."""
+    m_local, n_shards = bp.m_local, bp.n_shards
+    blocks = rows.reshape(n_shards, m_local, -1)
+    recv = np.stack([blocks[s][bp.intra_src[k, s]]
+                     for s in range(n_shards)])
+    for sub in bp.substeps[k]:
+        sent = np.stack([blocks[s][sub.send_lanes[s]]
+                         for s in range(n_shards)])    # [S, width, n]
+        got = np.zeros_like(sent)                       # ppermute zero-fill
+        for s_src, s_dst in sub.pairs:
+            got[s_dst] = sent[s_src]
+        for s in range(n_shards):
+            for b in range(sub.width):
+                if sub.recv_lanes[s, b] < m_local:      # drop-mode scatter
+                    recv[s, sub.recv_lanes[s, b]] = got[s, b]
+    return recv.reshape(rows.shape[0], -1)
+
+
+@pytest.mark.parametrize("spec,n_shards", [
+    (MixingSpec.ring(M), 4),
+    (MixingSpec.ring(M), 2),
+    (MixingSpec.torus(4, 4), 4),
+    (MixingSpec.dense(erdos_renyi_graph(12, 0.5, seed=3)), 3),
+    (MixingSpec.dense(star_graph(M)), 4),
+], ids=lambda v: getattr(getattr(v, "graph", None), "name", v))
+def test_block_plan_realizes_every_step(spec, n_shards):
+    """The block compilation (intra lane gathers + boundary ppermute
+    sub-steps) reproduces each step's receive ``rows[src[k]]`` at every
+    NON-IDLE lane, for shift plans and matchings alike."""
+    plan = spec.gossip_plan()
+    bp = plan.block_plan(n_shards)
+    assert bp.m_local * n_shards == spec.m
+    rng = np.random.default_rng(0)
+    rows = rng.normal(size=(spec.m, 7)).astype(np.float32)
+    for k in range(plan.n_steps):
+        got = _simulate_block_step(bp, k, rows)
+        want = rows[plan.src[k]]
+        live = plan.src[k] != np.arange(spec.m)
+        np.testing.assert_array_equal(got[live], want[live])
+        # every sub-step is a partial shard permutation
+        for sub in bp.substeps[k]:
+            srcs = [p[0] for p in sub.pairs]
+            dsts = [p[1] for p in sub.pairs]
+            assert len(set(srcs)) == len(srcs)
+            assert len(set(dsts)) == len(dsts)
+
+
+def test_block_plan_ring_wire_is_boundary_only():
+    """Contiguous-blocked ring: ONE boundary lane per direction per shard
+    — O(n_shards * boundary_degree) lane slots, matching the graph's
+    boundary-edge count, with zero wire for the intra-block edges."""
+    for m, n_shards in ((M, 4), (32, 8), (64, 8)):
+        spec = MixingSpec.ring(m, self_weight=0.5)
+        bp = spec.gossip_plan().block_plan(n_shards)
+        assert bp.num_collectives == 2          # one ppermute per shift
+        assert bp.num_wire_lane_slots == 2 * n_shards
+        assert bp.num_wire_lane_slots == \
+            spec.graph.block_boundary_edges(m // n_shards)
+        for subs in bp.substeps:
+            assert all(sub.width == 1 for sub in subs)
+    # degenerate single-shard mesh: everything is intra, zero collectives
+    bp1 = MixingSpec.ring(M).gossip_plan().block_plan(1)
+    assert bp1.num_collectives == 0 and bp1.num_wire_lane_slots == 0
+
+
+def test_block_plan_rejects_non_dividing_shards():
+    plan = MixingSpec.ring(M).gossip_plan()
+    with pytest.raises(ValueError, match="block"):
+        plan.block_plan(3)
+
+
+def test_auto_resolution_accepts_block_meshes():
+    """auto -> sparse when the mesh's shard count DIVIDES m (each shard a
+    block of m_local clients), not only when it equals m."""
+    import types
+    mesh4 = types.SimpleNamespace(axis_names=("clients",),
+                                  devices=np.zeros((4,)))
+    mesh3 = types.SimpleNamespace(axis_names=("clients",),
+                                  devices=np.zeros((3,)))
+    cfg = MixerConfig(impl="auto")
+    sched = TopologySchedule.edge_sample(ring_graph(M), 0.5)
+    assert cfg.resolved_impl(sched, mesh4) == "sparse"
+    assert cfg.resolved_impl(MixingSpec.ring(M), mesh4) == "ring"
+    # 3 shards don't divide m=8: unusable, dense
+    assert cfg.resolved_impl(sched, mesh3) == "dense"
+
+
+def test_plan_round_bits_block_sharded_bills_boundary_lanes():
+    d = 1000
+    ring = MixingSpec.ring(32, self_weight=0.5)
+    plan = ring.gossip_plan()
+    q = QuantConfig(bits=8)
+    # one-client-per-shard: every directed edge (2m); blocked over 8
+    # shards: only the 2*n_shards boundary lanes
+    assert plan_round_bits(plan, d, q) == (32 + 8 * d) * 2 * 32
+    assert plan_round_bits(plan, d, q, clients_per_shard=4) \
+        == (32 + 8 * d) * 2 * 8
 
 
 # ---------------------------------------------------------------------------
