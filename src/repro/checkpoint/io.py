@@ -92,6 +92,30 @@ def latest_step(ckpt_dir: str | Path) -> int | None:
     return steps[-1] if steps else None
 
 
+def read_checkpoint(ckpt_dir: str | Path,
+                    step: int | None = None
+                    ) -> tuple[dict[str, np.ndarray], int]:
+    """Raw read: flat ``{keypath: array}`` dict, no reference pytree.
+
+    The structured loader (:func:`restore_checkpoint`) needs a ``like``
+    pytree to rebuild the treedef — callers whose structure is itself
+    recorded in the checkpoint (the client pool stores a VARIABLE number
+    of materialized slabs) read the flat keypath->array map instead and
+    reassemble from their own manifest entries. Keys are the same
+    "/"-joined keypaths ``save_checkpoint`` writes.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as data:
+        out = {k: data[k] for k in manifest["leaves"]}
+    return out, step
+
+
 def restore_checkpoint(ckpt_dir: str | Path, like: Pytree,
                        step: int | None = None) -> tuple[Pytree, int]:
     """Restore into the structure of ``like`` (shapes/dtypes verified)."""

@@ -23,6 +23,9 @@ from .async_gossip import (AsyncConfig, AsyncRoundState,  # noqa
                            init_async_state, staleness_weights,
                            staleness_eta, make_async_round_step,
                            make_async_engine)
+from .client_pool import (ClientPool, PoolSchedule, PooledRunner,  # noqa
+                          PooledAsyncRunner, make_pooled_round_step,
+                          ring_matching_src)
 from .baselines import (FedAvgConfig, make_fedavg_step, DSGDConfig,  # noqa
                         make_dsgd_step)
 from .comm_cost import (CommLedger, dfedavgm_round_bits, fedavg_round_bits,  # noqa

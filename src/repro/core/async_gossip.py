@@ -43,6 +43,22 @@ row-stochastic but no longer symmetric, so Theorem 1 does not literally
 apply — convergence follows the time-varying/asynchronous analyses of the
 follow-up papers. ``benchmarks/bench_async.py`` measures the payoff:
 virtual wall-clock to a target loss under a straggler tail.
+
+Invariants (pinned by ``tests/test_async_gossip.py`` and relied on by the
+pooled execution mode, ``core.client_pool``):
+
+  * ROW-STOCHASTICITY UNDER THE STALENESS CUTOFF: for any base
+    row-stochastic ``W``, :func:`staleness_weights` keeps every row
+    summing to 1 with non-negative entries — discounted off-diagonal mass
+    folds into the self weight, and rows of non-ready clients degenerate
+    to ``e_i`` (they hold their parameters exactly, bit for bit).
+  * VERSION MONOTONICITY: ``version[i]`` increments exactly when client
+    i's clock fires AND the schedule lets it participate — it never
+    decreases and never changes outside i's own events. Data pipelines
+    must key on it (``batch_fn``), never on the global event index.
+  * SUPPORT CONTAINMENT: ``W_eff``'s off-diagonal support is a subset of
+    the base topology's — staleness only *removes* edges, so the sparse
+    backend's compiled wire schedule stays valid for every event.
 """
 from __future__ import annotations
 
@@ -206,7 +222,8 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                           mesh=None, client_axes: Sequence[str] = (),
                           param_specs: Pytree | None = None,
                           fused_update=None,
-                          with_metrics: bool = True) -> Callable:
+                          with_metrics: bool = True,
+                          batch_fn: Callable | None = None) -> Callable:
     """Build event_step(state: AsyncRoundState, batches) -> (state',
     metrics) — ONE event of the asynchronous engine (the unit
     :func:`make_async_engine` scans over; also the drop-in round step
@@ -223,6 +240,16 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     ``spec`` may be a static :class:`MixingSpec` or any non-stateful
     :class:`TopologySchedule` (the event index drives the schedule, and
     the schedule's active mask composes with the clock's ready mask).
+
+    ``batch_fn``: optional in-graph data pipeline
+    ``(client_ids [m], versions [m]) -> batches`` keyed on each client's
+    own VERSION counter (e.g. ``repro.data.lm_client_batches``). When
+    given, the returned step ignores its ``batches`` argument (pass None)
+    and derives each event's data from the pre-event versions — so a
+    client's data stream is invariant to how the fleet's events
+    interleave. Keying on the global event index instead was a bug: two
+    runs differing only in straggler timing fed every client different
+    data.
     """
     scheduled = isinstance(spec, TopologySchedule)
     if scheduled and spec.is_stateful:
@@ -238,9 +265,18 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                           plan=plan, wire=mcfg.wire, gate=True)
     W_static = None if scheduled else jnp.asarray(spec.W, jnp.float32)
 
-    def event_step(state: AsyncRoundState, batches: Pytree):
+    def event_step(state: AsyncRoundState, batches: Pytree = None):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
         client_keys = jax.random.split(key_round, m)
+
+        if batch_fn is not None:
+            # Version-keyed pipeline: client i's data depends only on its
+            # own pre-event progress counter, not the event index.
+            batches = batch_fn(jnp.arange(m, dtype=jnp.int32),
+                               state.version)
+        elif batches is None:
+            raise ValueError("event_step needs batches (or build the step "
+                             "with a version-keyed batch_fn)")
 
         t_now, ready = next_event(state.next_ready)
 
@@ -312,19 +348,32 @@ def make_async_engine(loss_fn: LossFn, cfg: DFedAvgMConfig,
                       mesh=None, client_axes: Sequence[str] = (),
                       param_specs: Pytree | None = None,
                       fused_update=None,
-                      with_metrics: bool = True) -> Callable:
+                      with_metrics: bool = True,
+                      batch_fn: Callable | None = None) -> Callable:
     """The whole event queue in one graph: run(state, batches) scans
     :func:`make_async_round_step` over a leading EVENT axis (``batches``
     leaves [n_events, m, K, ...]) and returns (state', metrics) with every
     metric stacked [n_events]. XLA sees a single ``lax.scan`` — one
-    compiled while-loop regardless of how many events are processed."""
+    compiled while-loop regardless of how many events are processed.
+
+    With a version-keyed ``batch_fn`` (see :func:`make_async_round_step`)
+    there is no pre-staged batch axis — call ``run(state, n_events=N)``
+    and each scanned event derives its own data from the live version
+    counters."""
     step = make_async_round_step(loss_fn, cfg, spec, async_cfg, mesh=mesh,
                                  client_axes=client_axes,
                                  param_specs=param_specs,
                                  fused_update=fused_update,
-                                 with_metrics=with_metrics)
+                                 with_metrics=with_metrics,
+                                 batch_fn=batch_fn)
 
-    def run(state: AsyncRoundState, batches: Pytree):
+    def run(state: AsyncRoundState, batches: Pytree = None,
+            n_events: int | None = None):
+        if batch_fn is not None:
+            if n_events is None:
+                raise ValueError("version-keyed engine: pass n_events")
+            return jax.lax.scan(lambda s, _: step(s, None), state, None,
+                                length=n_events)
         return jax.lax.scan(step, state, batches)
 
     return run

@@ -34,6 +34,8 @@ __all__ = ["FedAvgConfig", "make_fedavg_step", "DSGDConfig", "make_dsgd_step"]
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgConfig:
+    """Centralized FedAvg baseline hyper-parameters (the paper's
+    comparison point: one server round == K local steps + an average)."""
     eta: float = 0.1
     theta: float = 0.0       # plain local SGD unless momentum requested
     local_steps: int = 4
@@ -70,6 +72,8 @@ def make_fedavg_step(loss_fn: LossFn, cfg: FedAvgConfig, m: int,
 
 @dataclasses.dataclass(frozen=True)
 class DSGDConfig:
+    """Decentralized SGD (eq. 2) baseline: one gradient step per gossip
+    round, step size ``gamma`` — no local epochs, no momentum."""
     gamma: float = 0.1
 
 

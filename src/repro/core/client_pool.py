@@ -1,0 +1,908 @@
+"""Virtual client pool: host-backed parameter store for 10^5-10^6 clients.
+
+The paper's premise is "an enormous number of clients" gossiping without a
+server, but the resident execution mode stacks every client's parameters
+in device memory — m is capped by HBM, not by the topology. This module
+decouples the LOGICAL population from the RESIDENT lanes:
+
+  * :class:`ClientPool` — a copy-on-write numpy slab store on the host
+    holding all m logical clients' parameters and version counters.
+    Clients that have never trained read the shared init template and
+    occupy no slab row, so memory is O(touched clients), not O(m).
+  * :class:`PoolSchedule` — the cohort sampler: replicates the resident
+    :class:`~repro.core.topology.TopologySchedule` PRNG draws exactly
+    (same key splits, same ``permutation``/walk stream) but materializes
+    only the round's k-client cohort and its [k, k] mixing submatrix.
+    Structural-ring constructors never build the O(m^2) adjacency.
+  * :func:`make_pooled_round_step` — the device round step at cohort
+    width: local SGD + gossip on k lanes, dense or sparse(-reference)
+    backend, fp32 or quantized flat-wire math.
+  * :class:`PooledRunner` — the host loop: fetch-cohort -> H2D ->
+    local-SGD + gossip -> D2H write-back, with DOUBLE-BUFFERED PREFETCH:
+    round t+1's cohort is sampled, fetched, and staged while round t
+    computes; overlap rows are patched from round t's device output after
+    write-back, so the prefetch is bitwise-equivalent to a post-write
+    fetch.
+  * :class:`PooledAsyncRunner` — the async ready-set cohort mode: each
+    event materializes the ready clients plus their graph neighbors and
+    replicates the resident event engine's math on that closure.
+
+Invariants (pinned by ``tests/test_client_pool.py``):
+
+  * POOL VERSION MONOTONICITY: ``pool.versions[i]`` only ever increments,
+    and only when client i's row is written back (sync: i's cohort
+    rounds; async: i's ready events). Data pipelines key on it.
+  * BITWISE PARITY: for the same seed key, pooled execution reproduces
+    the resident path bit for bit — identical cohort draws (the PRNG
+    chain is shared, not re-implemented), identical per-lane local SGD
+    (vmap lanes are independent), and identical mixing for DEGREE <= 2
+    base topologies (ring partial cohorts, random walks), where every
+    row's reduction has at most 2 off-diagonal terms and sub-width vs
+    full-width accumulation provably agree. Quantized rounds draw
+    stochastic-rounding keys at the FULL logical width and gather the
+    cohort's rows, so wire words are bitwise identical too.
+  * COHORT CLOSURE (async): the materialized lane set contains every
+    client whose row of ``W_eff`` is non-degenerate — ready clients and
+    all their neighbors — so no mix ever reads a non-resident value.
+  * BILLING INTACTNESS: pooled rounds bill the same
+    ``message_bits * expected_directed_edges`` formula as the resident
+    schedule (``PoolSchedule.round_bits`` == ``schedule_round_bits``),
+    and local-SGD FLOPs are billed over the same k gathered lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .async_gossip import (AsyncConfig, _CLOCK_SALT, staleness_eta,
+                           staleness_weights)
+from .dfedavgm import DFedAvgMConfig
+from .event_clock import next_event
+from .gossip_plan import matching_steps
+from .local_sgd import local_train
+from .mixing import _mix_dense_quantized, _quant_leaf_keys, mix_dense
+from .quantize import QuantConfig, message_bits
+from .topology import (MixingSpec, TopologySchedule,
+                       metropolis_weights_from_adjacency)
+from .wire_layout import WireLayout
+
+Pytree = Any
+LossFn = Callable[..., jnp.ndarray]
+
+__all__ = ["ClientPool", "PoolSchedule", "PooledRoundStep",
+           "make_pooled_round_step", "PooledRunner", "PooledAsyncRunner",
+           "ring_matching_src"]
+
+
+# ---------------------------------------------------------------------------
+# Structural ring plan: O(m) replication of matching_steps(ring_graph(m))
+# ---------------------------------------------------------------------------
+
+def ring_matching_src(m: int) -> np.ndarray:
+    """The exact ``src`` array ``matching_steps(ring_graph(m).adj)``
+    produces, built in O(m) without the dense adjacency.
+
+    The greedy edge coloring walks triu edges row-major — (0,1), (0,m-1),
+    (1,2), (2,3), ... — so color 0 takes (0,1) and the even-i chain edges,
+    color 1 takes (0,m-1) and the odd-i chain edges, and an odd m pushes
+    the final edge (m-2, m-1) to color 2 (both its endpoints already hold
+    colors 0 and 1). Verified against ``matching_steps`` in tests.
+    """
+    if m < 2:
+        raise ValueError("ring plan needs m >= 2")
+    if m == 2:
+        return np.array([[1, 0]], np.int32)
+    n_steps = 2 if m % 2 == 0 else 3
+    src = np.tile(np.arange(m, dtype=np.int32), (n_steps, 1))
+
+    def assign(c, i, j):
+        src[c, i], src[c, j] = j, i
+
+    assign(0, 0, 1)
+    assign(1, 0, m - 1)
+    for i in range(1, m - 2):
+        assign(1 if i % 2 else 0, i, i + 1)
+    assign(0 if m % 2 == 0 else 2, m - 2, m - 1)
+    return src
+
+
+def _ring_walk(m: int, horizon: int, seed: int, start: int) -> np.ndarray:
+    """Replicates ``TopologySchedule.random_walk(ring_graph(m), ...)``'s
+    host-side path precomputation without the dense adjacency:
+    ``Graph.neighbors(i)`` returns ``np.nonzero(adj[i])[0]`` — for a ring
+    that is the ASCENDING pair {(i-1)%m, (i+1)%m} (one neighbor at
+    m == 2) — and the next position is ``rng.choice`` over it with the
+    same ``default_rng(seed)`` stream."""
+    rng = np.random.default_rng(seed)
+    pos = np.empty(horizon + 1, dtype=np.int32)
+    pos[0] = start
+    for k in range(horizon):
+        i = int(pos[k])
+        if m == 2:
+            nbrs = np.array([1 - i])
+        else:
+            nbrs = np.array(sorted(((i - 1) % m, (i + 1) % m)))
+        pos[k + 1] = rng.choice(nbrs)
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# ClientPool: copy-on-write host slab store
+# ---------------------------------------------------------------------------
+
+class ClientPool:
+    """Host-side parameter store for m logical clients, copy-on-write.
+
+    ``template`` is ONE client's parameter pytree (no leading client
+    axis) — the shared init every virgin client reads. A slab row is
+    allocated the first time a client's parameters are written back, so
+    host memory is O(materialized clients * d), independent of m until
+    every client has trained. ``versions[i]`` counts write-backs to
+    client i and is STRICTLY MONOTONIC (the pool-version invariant).
+    """
+
+    def __init__(self, template: Pytree, m: int):
+        if m < 1:
+            raise ValueError("need m >= 1")
+        leaves, treedef = jax.tree.flatten(template)
+        self.m = int(m)
+        self._treedef = treedef
+        self._template = [np.asarray(jax.device_get(l)) for l in leaves]
+        self._slabs: list[np.ndarray] = [
+            np.empty((0,) + t.shape, t.dtype) for t in self._template]
+        self._slot = np.full(m, -1, np.int64)
+        self._n_slots = 0
+        self.versions = np.zeros(m, np.int32)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def template(self) -> Pytree:
+        """The shared init pytree (client-local, no leading axis)."""
+        return jax.tree.unflatten(self._treedef, list(self._template))
+
+    @property
+    def materialized(self) -> int:
+        """Number of clients holding their own slab row."""
+        return self._n_slots
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes HELD by materialized rows (allocated capacity may be
+        up to ~2x during geometric growth)."""
+        per_client = sum(t.nbytes for t in self._template)
+        return self._n_slots * per_client
+
+    @property
+    def n_params(self) -> int:
+        return int(sum(t.size for t in self._template))
+
+    # -- fetch / write-back ------------------------------------------------
+
+    def fetch(self, idx) -> Pytree:
+        """Gather clients ``idx`` [k] into a stacked pytree of fresh numpy
+        arrays (leaves [k, ...]); virgin clients read the template."""
+        idx = np.asarray(idx, np.int64)
+        slot = self._slot[idx]
+        have = slot >= 0
+        out = []
+        for t, slab in zip(self._template, self._slabs):
+            buf = np.empty((idx.size,) + t.shape, t.dtype)
+            buf[have] = slab[slot[have]]
+            buf[~have] = t
+            out.append(buf)
+        return jax.tree.unflatten(self._treedef, out)
+
+    def writeback(self, idx, stacked: Pytree, mask=None) -> None:
+        """Scatter stacked rows (leaves [k, ...]) back to clients ``idx``,
+        allocating slab rows for first-time writers and bumping each
+        written client's version. ``mask`` [k] bool restricts the write
+        (the async engine writes only the event's ready lanes)."""
+        idx = np.asarray(idx, np.int64)
+        if mask is not None:
+            keep = np.asarray(mask, bool)
+            idx = idx[keep]
+        if np.unique(idx).size != idx.size:
+            raise ValueError("writeback cohort has duplicate client ids")
+        leaves = self._treedef.flatten_up_to(stacked)
+        if mask is not None:
+            leaves = [np.asarray(l)[keep] for l in leaves]
+        new = idx[self._slot[idx] < 0]
+        if new.size:
+            need = self._n_slots + new.size
+            cap = self._slabs[0].shape[0] if self._slabs else 0
+            if need > cap:
+                cap_next = max(need, 2 * cap, 64)
+                cap_next = min(cap_next, self.m)
+                cap_next = max(cap_next, need)
+                for li, (t, slab) in enumerate(
+                        zip(self._template, self._slabs)):
+                    grown = np.empty((cap_next,) + t.shape, t.dtype)
+                    grown[:self._n_slots] = slab[:self._n_slots]
+                    self._slabs[li] = grown
+            self._slot[new] = np.arange(self._n_slots, need)
+            self._n_slots = need
+        slot = self._slot[idx]
+        for slab, rows in zip(self._slabs, leaves):
+            slab[slot] = np.asarray(rows)
+        self.versions[idx] += 1
+
+    # -- checkpointing (builds on checkpoint/io.py) ------------------------
+
+    def save(self, ckpt_dir, step: int, extra: dict | None = None,
+             keep: int = 3):
+        """Serialize via :func:`repro.checkpoint.save_checkpoint` — only
+        the MATERIALIZED slab rows hit disk. ``extra`` is a flat
+        {name: array} dict for runner state (rng, round counter)."""
+        from ..checkpoint.io import save_checkpoint
+        tree = {
+            "pool": {
+                "m": np.asarray(self.m, np.int64),
+                "slot": self._slot.copy(),
+                "versions": self.versions.copy(),
+                "slabs": {f"{li:03d}": slab[:self._n_slots].copy()
+                          for li, slab in enumerate(self._slabs)},
+            },
+            "extra": {k: np.asarray(jax.device_get(v))
+                      for k, v in (extra or {}).items()},
+        }
+        return save_checkpoint(ckpt_dir, step, tree, keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir, template: Pytree, step: int | None = None
+                ) -> tuple["ClientPool", dict, int]:
+        """Rebuild (pool, extra, step) from a :meth:`save` checkpoint.
+        ``template`` supplies the client-local structure and dtypes (the
+        npz upcasts bf16 on disk; we cast back)."""
+        from ..checkpoint.io import read_checkpoint
+        data, step = read_checkpoint(ckpt_dir, step)
+        pool = cls(template, int(data["pool/m"]))
+        pool._slot = data["pool/slot"].astype(np.int64)
+        pool.versions = data["pool/versions"].astype(np.int32)
+        n = int((pool._slot >= 0).sum())
+        pool._n_slots = n
+        for li, t in enumerate(pool._template):
+            pool._slabs[li] = (data[f"pool/slabs/{li:03d}"]
+                               .astype(t.dtype, copy=True))
+        extra = {k[len("extra/"):]: v for k, v in data.items()
+                 if k.startswith("extra/")}
+        return pool, extra, step
+
+
+# ---------------------------------------------------------------------------
+# PoolSchedule: cohort sampling that replicates the resident PRNG draws
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PoolSchedule:
+    """Cohort sampler for pooled execution.
+
+    Replicates the resident :class:`TopologySchedule` draw EXACTLY — same
+    ``_split_mix_key`` discipline, same ``permutation``/walk stream — but
+    returns the round's k-client cohort (ascending ids, the order the
+    resident skip path's ``jnp.nonzero`` gather produces) and its [k, k]
+    mixing submatrix instead of full-width arrays. ``adj=None`` means a
+    structural ring base: cohort adjacency and the gossip plan are
+    derived from index arithmetic, so nothing is ever O(m^2).
+
+    Kinds: ``partial`` (exact cohorts, ``partial(..., exact=True)``
+    semantics) and ``random_walk`` (precomputed path). i.i.d./capped
+    participation and stateful walks have no static resident cohort and
+    are rejected by :meth:`from_schedule`.
+    """
+
+    kind: str                      # "partial" | "random_walk"
+    m: int
+    cohort_size: int
+    name: str = "pool"
+    adj: np.ndarray | None = None  # dense base adjacency (small m only)
+    walk: np.ndarray | None = None  # [horizon+1] precomputed walk path
+
+    def __post_init__(self):
+        if self.kind not in ("partial", "random_walk"):
+            raise ValueError(f"unknown pool schedule kind {self.kind!r}")
+        if not 1 <= self.cohort_size <= self.m:
+            raise ValueError("need 1 <= cohort_size <= m")
+        if self.kind == "random_walk" and self.walk is None:
+            raise ValueError("random_walk pool schedule needs the "
+                             "precomputed path")
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def from_schedule(schedule: TopologySchedule) -> "PoolSchedule":
+        """Wrap a resident schedule (dense adjacency retained — small m).
+        Pooled rounds then draw bit-identical cohorts to the resident
+        skip path on the same key."""
+        if schedule.kind == "partial" and schedule.n_active is not None:
+            return PoolSchedule(kind="partial", m=schedule.m,
+                                cohort_size=schedule.n_active,
+                                name=f"pool[{schedule.name}]",
+                                adj=np.asarray(schedule.adj))
+        if schedule.kind == "random_walk" and schedule.walk is not None:
+            return PoolSchedule(kind="random_walk", m=schedule.m,
+                                cohort_size=2,
+                                name=f"pool[{schedule.name}]",
+                                adj=np.asarray(schedule.adj),
+                                walk=np.asarray(schedule.walk))
+        raise ValueError(
+            f"pooled execution needs a statically sized cohort: "
+            f"partial(..., exact=True) or a precomputed random walk, got "
+            f"{schedule.name!r} (i.i.d./capped participation draws a "
+            f"variable active set; stateful walks carry in-graph state)")
+
+    @staticmethod
+    def ring_partial(m: int, p_active: float) -> "PoolSchedule":
+        """Structural-ring exact-cohort schedule — no dense adjacency, so
+        usable at m ~ 10^6. Draw-identical to
+        ``TopologySchedule.partial(ring_graph(m), p_active, exact=True)``."""
+        if not 0.0 < p_active <= 1.0:
+            raise ValueError("need 0 < p_active <= 1")
+        n_active = max(1, round(p_active * m))
+        return PoolSchedule(kind="partial", m=m, cohort_size=n_active,
+                            name=f"pool[partial[ring-{m},k={n_active}]]")
+
+    @staticmethod
+    def ring_random_walk(m: int, horizon: int = 4096, seed: int = 0,
+                         start: int = 0) -> "PoolSchedule":
+        """Structural-ring random walk — same ``default_rng(seed)`` path
+        stream as ``TopologySchedule.random_walk(ring_graph(m), ...)``."""
+        return PoolSchedule(kind="random_walk", m=m, cohort_size=2,
+                            name=f"pool[random_walk[ring-{m}]]",
+                            walk=_ring_walk(m, horizon, seed, start))
+
+    # -- resident-equivalent key discipline --------------------------------
+
+    @property
+    def is_stochastic(self) -> bool:
+        """Mirror of ``TopologySchedule.is_stochastic`` for the supported
+        kinds: exact-cohort draws consume PRNG randomness, precomputed
+        walks do not."""
+        return self.kind == "partial"
+
+    def split_mix_key(self, key_mix):
+        """``TopologySchedule._split_mix_key`` verbatim: stochastic kinds
+        split (key_topo, key_q); deterministic kinds reuse key_mix for
+        both."""
+        if self.is_stochastic:
+            return jax.random.split(key_mix)
+        return key_mix, key_mix
+
+    # -- in-graph cohort + submatrix ---------------------------------------
+
+    def cohort(self, key_topo, t) -> jnp.ndarray:
+        """Round t's cohort ids [k], ASCENDING (the resident skip path
+        orders lanes by ``jnp.nonzero(active)`` — ascending id). Jit-safe;
+        consumes the same draws as ``TopologySchedule.sample_w``."""
+        if self.kind == "partial":
+            ids = jax.random.permutation(key_topo, self.m)[:self.cohort_size]
+            return jnp.sort(ids.astype(jnp.int32))
+        t = jnp.asarray(t, jnp.int32)
+        pos = jnp.asarray(self.walk, jnp.int32)
+        horizon = pos.shape[0] - 1
+        i = pos[t % horizon]
+        j = pos[t % horizon + 1]
+        return jnp.sort(jnp.stack([i, j]))
+
+    def sub_adjacency(self, idx) -> jnp.ndarray:
+        """[k, k] f32 base adjacency restricted to the cohort. Structural
+        ring when ``adj`` is None (index arithmetic, O(k^2)); gathered
+        rows/cols of the dense base otherwise."""
+        if self.adj is not None:
+            a = jnp.asarray(self.adj, jnp.float32)
+            return a[idx][:, idx]
+        d = (idx[:, None] - idx[None, :]) % self.m
+        ring = (d == 1) | (d == (self.m - 1))
+        if self.m == 2:
+            ring = d == 1
+        return ring.astype(jnp.float32)
+
+    def w_sub(self, idx) -> jnp.ndarray:
+        """The cohort's [k, k] mixing submatrix — the same rows/cols of
+        the resident W_t. Exact-cohort rounds Metropolis-reweight the live
+        subgraph (degrees are integer-valued, so sub-width sums match the
+        resident full-width ones bit for bit); walk rounds pairwise-
+        average (the resident ``_token_pair_event`` values)."""
+        if self.kind == "partial":
+            return metropolis_weights_from_adjacency(self.sub_adjacency(idx))
+        return jnp.full((2, 2), 0.5, jnp.float32)
+
+    # -- sparse plan -------------------------------------------------------
+
+    def plan_src(self) -> np.ndarray:
+        """The support plan's ``src`` steps [n_steps, m] — identical to
+        ``schedule.gossip_plan().src`` (greedy matchings over the base
+        adjacency); the structural ring uses the O(m) replication
+        :func:`ring_matching_src`."""
+        if self.adj is not None:
+            return matching_steps(self.adj != 0)
+        return ring_matching_src(self.m)
+
+    # -- billing -----------------------------------------------------------
+
+    def expected_directed_edges(self) -> float:
+        """``TopologySchedule.expected_directed_edges`` for the supported
+        kinds, same expressions so the bills agree exactly."""
+        if self.kind == "partial":
+            base = (float(self.adj.sum()) if self.adj is not None
+                    else float(2 * self.m if self.m > 2 else 2))
+            k, m = self.cohort_size, self.m
+            return k * (k - 1) / (m * (m - 1)) * base
+        return 2.0
+
+    def round_bits(self, n_params: int,
+                   quant: QuantConfig | None = None) -> float:
+        """Expected bits one pooled round moves — the identical
+        live-directed-edge convention as
+        :func:`repro.core.comm_cost.schedule_round_bits`."""
+        qc = quant if quant is not None else QuantConfig(bits=32)
+        return message_bits(n_params, qc) * self.expected_directed_edges()
+
+
+# ---------------------------------------------------------------------------
+# Pooled round step (device side, cohort width)
+# ---------------------------------------------------------------------------
+
+class PooledRoundStep:
+    """The two jitted halves of a pooled round.
+
+    ``inputs(rng, t)`` — O(m) key work: splits the round keys exactly like
+    the resident step (``split(rng, 3)``; ``split(key_round, m)``), draws
+    the cohort, gathers the cohort's client keys / quantizer keys /
+    [k, k] submatrix. ``step(x_sub, batches, ...)`` — O(k) compute: vmap
+    local SGD over the cohort lanes and gossip at cohort width.
+    Metrics are the resident skip path's ``loss`` and ``active_frac``
+    (full-population metrics like ``consensus_dist`` need all m rows and
+    are intentionally absent at pool scale).
+    """
+
+    def __init__(self, inputs: Callable, step: Callable):
+        self.inputs = inputs
+        self.step = step
+
+
+def _cohort_lane_map(src_full, idx, W_sub, k):
+    """Remap the full-width plan steps onto cohort lanes.
+
+    For lane a (client i = idx[a]) and plan step s: if the step's source
+    client is another cohort member at lane p, the lane receives from p
+    with weight W_sub[a, p]; idle steps (src == self) and sources outside
+    the cohort get weight 0 and read the lane's own value (a no-op term —
+    the resident W_t is 0 there too, so the accumulation chains stay
+    term-for-term identical)."""
+    s = src_full[:, idx]                              # [n_steps, k]
+    pos = jnp.clip(jnp.searchsorted(idx, s), 0, k - 1)
+    hit = idx[pos] == s
+    lane = jnp.arange(k, dtype=pos.dtype)
+    lane_src = jnp.where(hit, pos, lane[None, :])
+    self_edge = s == idx[None, :]
+    w_steps = jnp.where(hit & ~self_edge,
+                        W_sub[lane[None, :], lane_src], 0.0)
+    return lane_src, w_steps
+
+
+def _mix_cohort_sparse(x_sub, z_sub, W_sub, idx, src_full, live, quant,
+                       leaf_keys_sub):
+    """``execute_plan_reference``'s math at cohort width: same per-step
+    accumulation chain (every live step contributes a term; off-cohort
+    terms carry the resident's exact 0 weight), same flat-wire layout /
+    per-leaf scales / packed words / one-client-at-a-time decode when
+    quantized."""
+    k = W_sub.shape[0]
+    w_self = jnp.diagonal(W_sub)
+    lane_src, w_steps = _cohort_lane_map(src_full, idx, W_sub, k)
+
+    if quant is None or not quant.enabled:
+
+        def mx(z):
+            zf = z.astype(jnp.float32)
+            bshape = (-1,) + (1,) * (zf.ndim - 1)
+            acc = w_self.reshape(bshape) * zf
+            for kk in live:
+                acc = acc + (w_steps[kk].reshape(bshape)
+                             * jnp.take(zf, lane_src[kk], axis=0))
+            return acc.astype(z.dtype)
+
+        return jax.tree.map(mx, z_sub)
+
+    from .mixing import _weighted_replica_base
+    layout = WireLayout.for_tree(jax.tree.map(lambda l: l[0], x_sub),
+                                 bits=quant.bits)
+    X = layout.to_planar_stacked(x_sub)
+    delta = layout.to_planar_stacked(jax.tree.map(
+        lambda zl, xl: zl - xl, z_sub, x_sub))
+    scales = layout.leaf_scales(delta, quant)
+    leaf_keys = leaf_keys_sub if quant.stochastic else None
+    words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys)
+
+    ws = jnp.stack([w_self] + [w_steps[kk] for kk in live], axis=1)
+    streams = jnp.stack(
+        [words] + [jnp.take(words, lane_src[kk], axis=0) for kk in live],
+        axis=1)
+    scs = jnp.stack(
+        [scales] + [jnp.take(scales, lane_src[kk], axis=0) for kk in live],
+        axis=1)
+    lemma5 = quant.delta_mode == "lemma5"
+    if lemma5:
+        base_in = jnp.stack(
+            [X] + [jnp.take(X, lane_src[kk], axis=0) for kk in live],
+            axis=1)
+    else:
+        base_in = X
+
+    def decode_one(args):
+        s, sc, w, b = args
+        base = _weighted_replica_base(b, w) if lemma5 else b
+        return layout.decode_apply(base, s, sc, w, quant)
+
+    out = jax.lax.map(decode_one, (streams, scs, ws, base_in))
+    return layout.from_planar_stacked(out)
+
+
+def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
+                           psched: PoolSchedule, template: Pytree,
+                           backend: str = "dense",
+                           fused_update=None) -> PooledRoundStep:
+    """Build the pooled round step for ``psched``'s cohorts.
+
+    ``template`` is one client's parameter pytree (fixes the leaf count
+    for quantizer-key derivation). ``backend``: "dense" mirrors the
+    resident dense mixer (``mix_dense`` / ``_mix_dense_quantized``) at
+    [k, k]; "sparse" mirrors ``execute_plan_reference`` — the mesh-free
+    spec of the masked-ppermute backend — with the plan's full-width
+    steps remapped onto cohort lanes in-graph.
+
+    Bit-parity contract: see the module docstring (exact for degree <= 2
+    bases; quantized wire words exact for any supported base because
+    encode is elementwise per lane under full-width gathered keys).
+    """
+    if backend not in ("dense", "sparse"):
+        raise ValueError(f"unknown pooled backend {backend!r}")
+    m, k = psched.m, psched.cohort_size
+    quant = cfg.quant
+    n_leaves = len(jax.tree.leaves(template))
+    stochastic_q = (quant is not None and quant.enabled
+                    and quant.stochastic)
+    if backend == "sparse":
+        src_np = psched.plan_src()
+        ar = np.arange(m)
+        live = [s for s in range(src_np.shape[0])
+                if (src_np[s] != ar).any()]
+        src_full = jnp.asarray(src_np)
+
+    def inputs(rng, t):
+        key_round, key_mix, key_next = jax.random.split(rng, 3)
+        client_keys = jax.random.split(key_round, m)
+        key_topo, key_q = psched.split_mix_key(key_mix)
+        idx = psched.cohort(key_topo, t)
+        out = {"idx": idx, "client_keys": client_keys[idx],
+               "W_sub": psched.w_sub(idx), "key_q": key_q,
+               "key_next": key_next}
+        if stochastic_q:
+            out["leaf_keys"] = _quant_leaf_keys(key_q, n_leaves, m)[:, idx]
+        return out
+
+    def step(x_sub, batches, client_keys_sub, W_sub, idx, key_q,
+             leaf_keys_sub=None):
+        train_one = lambda p, b, kk: local_train(
+            loss_fn, p, b, kk, eta=cfg.eta, theta=cfg.theta,
+            fused_update=fused_update)
+        z_sub, losses = jax.vmap(train_one)(x_sub, batches,
+                                            client_keys_sub)
+        if backend == "sparse":
+            x_next = _mix_cohort_sparse(x_sub, z_sub, W_sub, idx, src_full,
+                                        live, quant, leaf_keys_sub)
+        elif quant is None or not quant.enabled:
+            x_next = mix_dense(W_sub, z_sub)
+        else:
+            x_next = _mix_dense_quantized(W_sub, x_sub, z_sub, quant,
+                                          key_q, leaf_keys=leaf_keys_sub)
+        # The resident skip path's formulas with every slot valid.
+        valid = jnp.ones((k,), jnp.float32)
+        # active_frac replicates the resident ``jnp.mean(active)``: the f32
+        # sum of k ones is exactly f32(k) (k << 2^24), so f32(k)/f32(m) is
+        # the identical division without an O(m) scatter.
+        metrics = {
+            "loss": jnp.sum(losses * valid) / jnp.maximum(valid.sum(), 1.0),
+            "active_frac": jnp.float32(k) / jnp.float32(m),
+        }
+        return x_next, metrics
+
+    return PooledRoundStep(inputs=jax.jit(inputs),
+                           step=jax.jit(step, static_argnames=()))
+
+
+# ---------------------------------------------------------------------------
+# PooledRunner: the host loop with double-buffered prefetch
+# ---------------------------------------------------------------------------
+
+class PooledRunner:
+    """Host orchestration of pooled synchronous rounds.
+
+    Per round: (1) cohort t's staged buffers (prefetched last round or
+    fetched now), (2) SUBMIT the prefetch of cohort t+1 — key work,
+    pool fetch, H2D — on a worker thread, (3) run the device step, (4)
+    join the prefetch, (5) write cohort t back to the pool, (6) PATCH the
+    prefetched buffer's overlap rows from round t's device output (the
+    prefetch read pre-write-back rows; the patch makes it bitwise equal
+    to a post-write-back fetch). The pool is only ever mutated on the
+    caller's thread after the join, so fetch/write-back never race.
+
+    ``batch_fn(client_ids [k] np, t) -> batches`` (leaves [k, K, ...])
+    supplies the cohort's data (e.g. rows of ``lm_round_batches`` for
+    resident parity, or a version-keyed per-cohort generator at pool
+    scale).
+    """
+
+    def __init__(self, pool: ClientPool, psched: PoolSchedule,
+                 loss_fn: LossFn, cfg: DFedAvgMConfig,
+                 batch_fn: Callable, *, key,
+                 backend: str = "dense", fused_update=None,
+                 prefetch: bool = True):
+        if pool.m != psched.m:
+            raise ValueError(f"pool has m={pool.m}, schedule {psched.m}")
+        self.pool, self.psched, self.cfg = pool, psched, cfg
+        self._rs = make_pooled_round_step(loss_fn, cfg, psched,
+                                          pool.template, backend=backend,
+                                          fused_update=fused_update)
+        self.rng = jnp.asarray(key)
+        self.t = 0
+        self.batch_fn = batch_fn
+        self._pending = None
+        self._exec = (ThreadPoolExecutor(max_workers=1) if prefetch
+                      else None)
+        self.bits_per_round = psched.round_bits(pool.n_params, cfg.quant)
+        self.comm_bits = 0.0
+
+    def _prepare(self, rng, t: int):
+        inp = self._rs.inputs(rng, jnp.asarray(t, jnp.int32))
+        idx_np = np.asarray(inp["idx"])
+        return {"inp": inp, "idx": idx_np,
+                "x": jax.device_put(self.pool.fetch(idx_np)),
+                "batches": self.batch_fn(idx_np, t)}
+
+    def round(self):
+        """Run one pooled round; returns the round's metrics dict."""
+        cur = self._pending if self._pending is not None \
+            else self._prepare(self.rng, self.t)
+        self._pending = None
+        inp = cur["inp"]
+        fut = (self._exec.submit(self._prepare, inp["key_next"], self.t + 1)
+               if self._exec is not None else None)
+        x_next, metrics = self._rs.step(
+            cur["x"], cur["batches"], inp["client_keys"], inp["W_sub"],
+            inp["idx"], inp["key_q"], inp.get("leaf_keys"))
+        nxt = fut.result() if fut is not None else None
+        self.pool.writeback(
+            cur["idx"], jax.tree.map(np.asarray, jax.device_get(x_next)))
+        if nxt is not None:
+            # Patch overlap rows at FIXED [k] shape (both cohorts are
+            # ascending): rows of cur absent from nxt scatter to the
+            # out-of-bounds sentinel and drop, so the op compiles once
+            # regardless of how many clients the two cohorts share.
+            cur_j, nxt_j = jnp.asarray(cur["idx"]), jnp.asarray(nxt["idx"])
+            k_nxt = nxt_j.shape[0]
+            pos = jnp.clip(jnp.searchsorted(nxt_j, cur_j), 0, k_nxt - 1)
+            p = jnp.where(nxt_j[pos] == cur_j, pos, k_nxt)
+            nxt["x"] = jax.tree.map(
+                lambda b, xn: b.at[p].set(xn, mode="drop"),
+                nxt["x"], x_next)
+            self._pending = nxt
+        self.rng = inp["key_next"]
+        self.t += 1
+        self.comm_bits += self.bits_per_round
+        return metrics
+
+    def run(self, n_rounds: int) -> list:
+        return [self.round() for _ in range(n_rounds)]
+
+    # -- checkpoint interop ------------------------------------------------
+
+    def save(self, ckpt_dir, step: int | None = None, keep: int = 3):
+        """Checkpoint pool + RNG chain + round counter (the prefetched
+        buffer is a pure function of those and is rebuilt on restore)."""
+        return self.pool.save(
+            ckpt_dir, self.t if step is None else step,
+            extra={"rng": self.rng,
+                   "round": np.asarray(self.t, np.int64)}, keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir, template: Pytree, psched: PoolSchedule,
+                loss_fn: LossFn, cfg: DFedAvgMConfig, batch_fn: Callable,
+                *, step: int | None = None, **kwargs) -> "PooledRunner":
+        """Rebuild a runner mid-training; continuation is bit-identical
+        to the uninterrupted run (tested)."""
+        pool, extra, _ = ClientPool.restore(ckpt_dir, template, step=step)
+        runner = cls(pool, psched, loss_fn, cfg, batch_fn,
+                     key=jnp.asarray(extra["rng"]), **kwargs)
+        runner.t = int(extra["round"])
+        runner.comm_bits = runner.bits_per_round * runner.t
+        return runner
+
+
+# ---------------------------------------------------------------------------
+# Pooled asynchronous engine: ready-set cohorts
+# ---------------------------------------------------------------------------
+
+class PooledAsyncRunner:
+    """Event-driven async gossip over a pooled population.
+
+    Per event, the materialized cohort is the READY set plus its graph
+    neighbors (the cohort-closure invariant: exactly the clients whose
+    W_eff rows are non-degenerate or whose published values those rows
+    read), padded to the static ``capacity`` so the device step compiles
+    once. The event math replicates ``make_async_round_step`` on that
+    closure: same key chain, same ``staleness_weights`` on the gathered
+    versions, same clock-PRNG duration stream at full width — so a pooled
+    async run is bit-identical to the resident engine on the same seed
+    (dense backend, degree <= 2 topologies; ring base).
+
+    ``spec`` (a :class:`MixingSpec`, small m) or ``ring_self_weight``
+    (structural ring, any m) fixes the base W. ``batch_fn(client_ids,
+    versions) -> batches`` must be version-keyed (the satellite fix):
+    padded/neighbor lanes train throwaway copies exactly like the
+    resident engine trains busy lanes — only ready rows are written.
+    """
+
+    def __init__(self, pool: ClientPool, loss_fn: LossFn,
+                 cfg: DFedAvgMConfig, async_cfg: AsyncConfig,
+                 batch_fn: Callable, *, key, capacity: int,
+                 spec: MixingSpec | None = None,
+                 ring_self_weight: float | None = None,
+                 fused_update=None):
+        if (spec is None) == (ring_self_weight is None):
+            raise ValueError("pass exactly one of spec / ring_self_weight")
+        self.pool, self.cfg, self.async_cfg = pool, cfg, async_cfg
+        self.batch_fn = batch_fn
+        m = pool.m
+        self.m = m
+        self.capacity = int(capacity)
+        self._spec_W = (jnp.asarray(spec.W, jnp.float32)
+                        if spec is not None else None)
+        self._adj_np = (np.asarray(spec.graph.adj, bool)
+                        if spec is not None else None)
+        self._sw = ring_self_weight
+        quant = cfg.quant
+        self._stochastic_q = (quant is not None and quant.enabled
+                              and quant.stochastic)
+        self._n_leaves = len(jax.tree.leaves(pool.template))
+
+        # init_async_state's clock chain, held on the host
+        self.rng = jnp.asarray(key)
+        k_dur, self.clock_rng = jax.random.split(
+            jax.random.fold_in(self.rng, _CLOCK_SALT))
+        self.next_ready = async_cfg.speed.draw(k_dur, m)
+        self.version = np.zeros(m, np.int32)
+        self.clock = 0.0
+        self.round = 0
+
+        eta_decay = async_cfg.eta_staleness_decay
+
+        def event_body(x_sub, batches, ck_sub, idx, v_sub, ready_sub,
+                       valid, ready_total, key_q, leaf_keys_sub, etas_sub):
+            if eta_decay > 0.0:
+                train_one = lambda p, b, kk, e: local_train(
+                    loss_fn, p, b, kk, eta=e, theta=cfg.theta,
+                    fused_update=None)
+                z_sub, losses = jax.vmap(train_one)(x_sub, batches, ck_sub,
+                                                    etas_sub)
+            else:
+                train_one = lambda p, b, kk: local_train(
+                    loss_fn, p, b, kk, eta=cfg.eta, theta=cfg.theta,
+                    fused_update=fused_update)
+                z_sub, losses = jax.vmap(train_one)(x_sub, batches, ck_sub)
+
+            C = self.capacity
+            if self._spec_W is not None:
+                safe = jnp.minimum(idx, m - 1)
+                W_base = self._spec_W[safe][:, safe]
+                W_base = W_base * valid[:, None] * valid[None, :]
+            else:
+                d = (idx[:, None] - idx[None, :]) % m
+                ring = (d == 1) | (d == (m - 1)) if m > 2 else (d == 1)
+                adj = (ring.astype(jnp.float32)
+                       * valid[:, None] * valid[None, :])
+                w_nb = jnp.float32((1.0 - self._sw) / (2.0 if m > 2
+                                                       else 1.0))
+                W_base = (adj * w_nb
+                          + jnp.float32(self._sw) * jnp.eye(C))
+
+            v_next = v_sub + ready_sub.astype(jnp.int32)
+            W_eff = staleness_weights(W_base, v_next, ready_sub, async_cfg)
+
+            def gate(zl, xl):
+                mask = ready_sub.reshape((-1,) + (1,) * (zl.ndim - 1))
+                return jnp.where(mask > 0, zl, xl)
+
+            z_eff = jax.tree.map(gate, z_sub, x_sub)
+            if quant is None or not quant.enabled:
+                x_next = mix_dense(W_eff, z_eff)
+            else:
+                x_next = _mix_dense_quantized(W_eff, x_sub, z_eff, quant,
+                                              key_q,
+                                              leaf_keys=leaf_keys_sub)
+            eyeC = jnp.eye(C, dtype=jnp.float32)
+            metrics = {
+                "loss": jnp.sum(losses * ready_sub) / ready_total,
+                "live_edges": jnp.sum((W_eff * (1.0 - eyeC)) != 0.0),
+            }
+            return x_next, metrics
+
+        self._step = jax.jit(event_body)
+        self._client_keys = jax.jit(lambda kr: jax.random.split(kr, m))
+        self._leaf_keys = jax.jit(
+            lambda kq: _quant_leaf_keys(kq, self._n_leaves, m))
+
+    def _neighbors(self, ids: np.ndarray) -> np.ndarray:
+        if self._adj_np is not None:
+            return np.nonzero(self._adj_np[ids].any(axis=0))[0]
+        if self.m == 2:
+            return 1 - ids
+        return np.concatenate([(ids - 1) % self.m, (ids + 1) % self.m])
+
+    def step_event(self):
+        """Process one event; returns its metrics dict."""
+        m, C = self.m, self.capacity
+        key_round, key_mix, key_next = jax.random.split(self.rng, 3)
+        t_now, ready = next_event(self.next_ready)
+        ready_np = np.asarray(ready) > 0
+        ready_ids = np.nonzero(ready_np)[0]
+
+        cohort = np.unique(np.concatenate(
+            [ready_ids, self._neighbors(ready_ids)]))
+        if cohort.size > C:
+            raise RuntimeError(
+                f"async cohort of {cohort.size} clients exceeds the "
+                f"resident capacity {C}; raise capacity (many clients "
+                f"fired simultaneously — e.g. a constant speed model "
+                f"needs capacity = m)")
+        idx = np.full(C, m, np.int64)
+        idx[:cohort.size] = cohort
+        safe = np.minimum(idx, m - 1)
+        valid = (idx < m).astype(np.float32)
+
+        x_sub = jax.device_put(self.pool.fetch(safe))
+        v_sub = jnp.asarray(self.version[safe])
+        ready_sub = jnp.asarray(ready_np[safe].astype(np.float32)
+                                * valid)
+        batches = self.batch_fn(safe, self.version[safe])
+        ck_sub = self._client_keys(key_round)[jnp.asarray(safe)]
+        key_q = key_mix  # static spec: no topology split (resident path)
+        leaf_keys_sub = (self._leaf_keys(key_q)[:, jnp.asarray(safe)]
+                         if self._stochastic_q else None)
+        etas_sub = None
+        if self.async_cfg.eta_staleness_decay > 0.0:
+            etas_sub = staleness_eta(
+                self.cfg.eta, jnp.asarray(self.version),
+                self.async_cfg.eta_staleness_decay)[jnp.asarray(safe)]
+
+        x_next, dev_metrics = self._step(
+            x_sub, batches, ck_sub, jnp.asarray(idx), v_sub, ready_sub,
+            jnp.asarray(valid), ready.sum(), key_q, leaf_keys_sub,
+            etas_sub)
+
+        # advance the full-width clock state (resident chain, O(m) host)
+        self.version = self.version + ready_np.astype(np.int32)
+        k_dur, self.clock_rng = jax.random.split(self.clock_rng)
+        durations = self.async_cfg.speed.draw(k_dur, m)
+        self.next_ready = jnp.where(ready > 0, t_now + durations,
+                                    self.next_ready)
+        self.clock = float(t_now)
+
+        wmask = ready_np[safe] & (idx < m)
+        self.pool.writeback(idx, jax.tree.map(np.asarray, x_next),
+                            mask=wmask)
+        self.rng = key_next
+        self.round += 1
+        metrics = dict(dev_metrics)
+        metrics["clock"] = t_now
+        metrics["ready_frac"] = float(ready_np.mean())
+        return metrics
+
+    def run(self, n_events: int) -> list:
+        return [self.step_event() for _ in range(n_events)]

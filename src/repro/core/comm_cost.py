@@ -27,6 +27,8 @@ __all__ = ["dfedavgm_round_bits", "fedavg_round_bits", "dsgd_round_bits",
 
 def dfedavgm_round_bits(graph: Graph, d: int,
                         quant: QuantConfig | None = None) -> int:
+    """Bits one synchronous DFedAvgM round moves on a STATIC graph: every
+    directed edge carries one ``message_bits`` payload."""
     qc = quant if quant is not None else QuantConfig(bits=32)
     return message_bits(d, qc) * graph.num_directed_edges()
 
@@ -116,10 +118,12 @@ def async_event_bits(d: int, quant: QuantConfig | None = None,
 
 
 def dsgd_round_bits(graph: Graph, d: int) -> int:
+    """DSGD gossips raw fp32 params every round: 32d bits per edge."""
     return 32 * d * graph.num_directed_edges()
 
 
 def fedavg_round_bits(m: int, d: int) -> int:
+    """FedAvg's hub bill: every client up- AND down-links fp32 params."""
     return 2 * 32 * d * m
 
 

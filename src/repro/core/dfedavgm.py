@@ -62,6 +62,10 @@ class DFedAvgMConfig:
 
 
 class RoundState(NamedTuple):
+    """Carried state of the synchronous round loop (one jit-stable
+    pytree: stacked client params, the PRNG chain, the round counter,
+    and — for stateful schedules — the walk token)."""
+
     params: Pytree       # stacked client copies, leaves [m, ...]
     rng: jax.Array       # round-level key
     round: jnp.ndarray   # int32 counter

@@ -29,6 +29,18 @@ Consumed by both backends in ``core.mixing``: the dense einsum via
 :meth:`GossipPlan.as_matrix` (reference semantics) and the sparse
 shard_map backend via :meth:`wire_pairs` / :meth:`gather_weights`.
 
+Invariants (pinned by ``tests/test_gossip_plan.py``):
+
+  * ONE PPERMUTE PER PLAN STEP: each step is a single permutation over
+    the client axis — the whole flat wire buffer moves in one
+    ``jax.lax.ppermute``, never one collective per leaf or per edge.
+  * EXACT EDGE COVER: every directed support edge appears in exactly one
+    step (``_check_exact_cover``), so a gathered weight is applied once.
+  * Matchings are involutions (``src[src] == identity``) for non-ring
+    graphs; ring/torus steps are cyclic shifts.
+  * Weight-0 edges are algorithmically void: masked steps move bytes but
+    cannot change x' (the sampled-topology masking contract).
+
 BLOCK SHARDING (m > device count): a plan can additionally be compiled
 for a mesh where each shard holds a CONTIGUOUS BLOCK of ``m_local``
 clients (client ``c`` lives on shard ``c // m_local``, local lane

@@ -184,6 +184,9 @@ def _shard_map_no_repcheck(body, mesh, in_specs, out_specs):
 # ---------------------------------------------------------------------------
 
 def mix_dense(W: np.ndarray, stacked: Pytree) -> Pytree:
+    """Eq. 5 reference: x' = W @ z per leaf, f32 tensordot over the
+    client axis (the bitwise target every other backend is tested
+    against)."""
     Wj = jnp.asarray(W)
 
     def mx(z):
@@ -202,15 +205,25 @@ def _quant_leaf_keys(key: jax.Array, n_leaves: int, m: int) -> jax.Array:
 
 
 def _mix_dense_quantized(W: np.ndarray, x: Pytree, z: Pytree,
-                         quant: QuantConfig, key: jax.Array) -> Pytree:
-    """Eq. 7 with dense W: x + W @ Q(z - x), quantizing per client & leaf."""
+                         quant: QuantConfig, key: jax.Array,
+                         leaf_keys: jax.Array | None = None) -> Pytree:
+    """Eq. 7 with dense W: x + W @ Q(z - x), quantizing per client & leaf.
+
+    ``leaf_keys`` [n_leaves, m, 2] overrides the in-place key derivation —
+    the pooled cohort path derives keys at the FULL logical width and
+    gathers the cohort's rows, so a [k, k] sub-mix draws bit-identical
+    stochastic-rounding noise to the resident [m, m] mix.
+    """
     Wj = jnp.asarray(W, dtype=jnp.float32)
     m = Wj.shape[0]
     leaves_x, treedef = jax.tree.flatten(x)
     leaves_z = treedef.flatten_up_to(z)
     n_leaves = len(leaves_x)
-    keys = _quant_leaf_keys(key, n_leaves, m) \
-        if (quant.stochastic and quant.enabled) else [[None] * m] * n_leaves
+    if leaf_keys is not None:
+        keys = leaf_keys
+    else:
+        keys = _quant_leaf_keys(key, n_leaves, m) \
+            if (quant.stochastic and quant.enabled) else [[None] * m] * n_leaves
 
     out = []
     for li, (xl, zl) in enumerate(zip(leaves_x, leaves_z)):

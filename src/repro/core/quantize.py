@@ -143,6 +143,7 @@ def quantize_int(x: jnp.ndarray, cfg: QuantConfig,
 
 
 def dequantize_int(k: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int`: integer levels k back to f32 ks."""
     return k.astype(jnp.float32) * s
 
 
@@ -160,6 +161,7 @@ def quantize(x: jnp.ndarray, cfg: QuantConfig,
 # ---------------------------------------------------------------------------
 
 def packed_len(n: int, bits: int) -> int:
+    """u32 words needed to pack n ``bits``-wide fields (ceil division)."""
     per = 32 // bits
     return -(-n // per)  # ceil
 

@@ -120,6 +120,7 @@ def ring_graph(m: int) -> Graph:
 
 
 def chain_graph(m: int) -> Graph:
+    """Path 0-1-...-m-1: the worst-diameter connected topology."""
     adj = np.zeros((m, m), dtype=bool)
     for i in range(m - 1):
         adj[i, i + 1] = adj[i + 1, i] = True
@@ -144,6 +145,7 @@ def torus_graph(rows: int, cols: int) -> Graph:
 
 
 def complete_graph(m: int) -> Graph:
+    """All-to-all: gossip degenerates to exact averaging each round."""
     adj = ~np.eye(m, dtype=bool)
     return Graph(adj, name=f"complete{m}")
 

@@ -19,7 +19,22 @@ Numerics are unchanged: scales stay PER LEAF (segment max-abs, the same
 ``amax / qmax`` formula as ``core.quantize._scale_for``), and stochastic
 rounding draws the same per-leaf, per-client bits as the dense reference
 (``uniform(key_leaf_client, (n,))``, zero-padded — padding never rounds
-up). The codec has two interchangeable backends: the Pallas buffer
+up).
+
+Invariants (pinned by ``tests/test_wire_layout.py``):
+
+  * LANE-ALIGNED SEGMENTS: every leaf's column segment starts on a
+    ``LANE_BLOCK`` boundary of the planar buffer, so the Pallas kernels
+    tile it without cross-leaf reads and the XLA reference slices it
+    without gather ops; round-tripping ``to_planar``/``from_planar`` is
+    exact for every dtype.
+  * PER-LEAF SCALES: one scale per (client, leaf), identical to the
+    dense path's ``_scale_for`` — the flat layout changes memory
+    traffic, never numerics.
+  * Padding encodes to 0 words and never rounds up, so two models that
+    differ only in alignment padding put identical bits on the wire.
+
+The codec has two interchangeable backends: the Pallas buffer
 kernels (``kernels.quantize_pack`` / ``kernels.dequant_mix``, selected on
 TPU) and a pure-XLA reference (CPU default, and the kernels' parity
 oracle: the integer WIRE — packed words and scales — is bit-identical

@@ -1,4 +1,5 @@
 from .synthetic import (classification_dataset, char_stream,  # noqa
-                        lm_round_batches, ClassificationData)
+                        lm_round_batches, lm_client_batches,
+                        ClassificationData)
 from .federated import (FederatedDataset, partition_iid,  # noqa
                         partition_noniid_shards)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["classification_dataset", "char_stream", "lm_round_batches",
-           "ClassificationData"]
+           "lm_client_batches", "ClassificationData"]
 
 
 @dataclasses.dataclass
@@ -88,6 +88,33 @@ def lm_round_batches(key, round_idx: int, *, m: int, K: int, batch: int,
     structured sequence (learnable: tokens follow t+1 = (t*5+c) % vocab)."""
     k = jax.random.fold_in(key, round_idx)
     start = jax.random.randint(k, (m, K, batch, 1), 0, vocab)
+    ar = jnp.arange(seq + 1, dtype=jnp.int32)
+    tokens = (start + 5 * ar[None, None, None, :]) % vocab
+    return {"tokens": tokens[..., :seq].astype(jnp.int32),
+            "targets": tokens[..., 1:].astype(jnp.int32)}
+
+
+def lm_client_batches(key, client_ids, versions, *, K: int, batch: int,
+                      seq: int, vocab: int) -> dict:
+    """Per-CLIENT next-token batches [n, K, batch, seq], keyed on each
+    client's own progress counter instead of any global index.
+
+    ``client_ids`` [n] int and ``versions`` [n] int (the client's completed
+    local-round count) may be traced; batch ``i`` is a pure function of
+    ``(key, client_ids[i], versions[i])``. This is the data-pipeline
+    contract the asynchronous and pooled engines need: a client's data
+    stream advances only when *that client* trains, so the batches it sees
+    are invariant to how events interleave across the rest of the fleet
+    (the carried-forward bug keyed on the global event index instead —
+    permuting event order silently fed every client different data).
+    Token structure matches :func:`lm_round_batches` (t+1 = (t*5+c) % vocab).
+    """
+    def one(cid, v):
+        k = jax.random.fold_in(jax.random.fold_in(key, cid), v)
+        return jax.random.randint(k, (K, batch, 1), 0, vocab)
+
+    start = jax.vmap(one)(jnp.asarray(client_ids, jnp.int32),
+                          jnp.asarray(versions, jnp.int32))
     ar = jnp.arange(seq + 1, dtype=jnp.int32)
     tokens = (start + 5 * ar[None, None, None, :]) % vocab
     return {"tokens": tokens[..., :seq].astype(jnp.int32),

@@ -77,6 +77,27 @@ def make_client_mesh(m: int, axis: str = "clients",
     return Mesh(np.array(devs[:n_shards]), (axis,))
 
 
+def resident_lane_capacity(bytes_per_client: int,
+                           budget_bytes: int | None = None,
+                           overhead: float = 4.0) -> int:
+    """How many client lanes fit device memory — the pooled-execution
+    sizing heuristic (``--resident-lanes`` defaults from this).
+
+    ``bytes_per_client`` is one client's parameter bytes;  ``overhead``
+    budgets the working set per lane (params + momentum + grads + update
+    temporaries ~= 4x params). ``budget_bytes`` defaults to the first
+    device's reported memory (v5e: 16 GiB HBM) or 2 GiB when the backend
+    doesn't report one (CPU). Always returns at least 1.
+    """
+    if budget_bytes is None:
+        try:
+            stats = jax.devices()[0].memory_stats() or {}
+            budget_bytes = stats.get("bytes_limit", 0) or 2 << 30
+        except Exception:
+            budget_bytes = 2 << 30
+    return max(1, int(budget_bytes / (overhead * bytes_per_client)))
+
+
 # v5e hardware constants for the roofline analysis (per chip / per link)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

@@ -24,7 +24,7 @@ from ..core import (AsyncConfig, CommLedger, DFedAvgMConfig, MixingSpec,
                     async_event_bits, average_params, init_async_state,
                     init_round_state, make_round_step, round_comm_bits)
 from ..core.topology import erdos_renyi_graph, ring_graph, torus_graph
-from ..data.synthetic import lm_round_batches
+from ..data.synthetic import lm_client_batches, lm_round_batches
 from ..models import model as M
 
 
@@ -59,6 +59,93 @@ def build_topology(args, m: int):
         return TopologySchedule.cycle(
             [ring, MixingSpec.torus(rows, m // rows)])
     raise SystemExit(f"unknown --schedule {args.schedule!r}")
+
+
+def run_pooled(args, cfg):
+    """Virtual-client-pool execution: all ``--clients`` live in a host-
+    side :class:`~repro.core.client_pool.ClientPool`; only the round's
+    cohort (``--resident-lanes`` wide) is materialized on device. Scales
+    m to 10^5-10^6 on one host — the structural-ring schedule
+    constructors never build the O(m^2) adjacency, and data is generated
+    per cohort, keyed on (client id, progress counter)."""
+    from ..core import (ClientPool, PoolSchedule, PooledAsyncRunner,
+                        PooledRunner)
+    from .mesh import resident_lane_capacity
+
+    m = args.clients
+    quant = QuantConfig(bits=args.bits) if args.bits < 32 else None
+    dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
+                          local_steps=args.local_steps, quant=quant)
+    key = jax.random.PRNGKey(args.seed)
+    k_init, k_state, k_data = jax.random.split(key, 3)
+    params, _ = M.init_model(k_init, cfg)
+    template = params
+    d = cfg.n_params()
+
+    lanes = args.resident_lanes
+    if lanes is None:
+        per_client = sum(np.dtype(l.dtype).itemsize * l.size
+                         for l in jax.tree.leaves(template))
+        lanes = min(m, resident_lane_capacity(per_client))
+    loss = lambda p, b, r: M.loss_fn(p, cfg, b, r)
+    pool = ClientPool(template, m)
+    data_kw = dict(K=args.local_steps, batch=args.batch, seq=args.seq,
+                   vocab=cfg.vocab_size)
+
+    if args.async_gossip:
+        speed = {"constant": SpeedModel.constant(),
+                 "lognormal": SpeedModel.lognormal(),
+                 "straggler": SpeedModel.straggler()}[args.speed_model]
+        acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness,
+                           eta_staleness_decay=args.eta_staleness_decay)
+        bf = lambda ids, vers: lm_client_batches(k_data, ids, vers,
+                                                 **data_kw)
+        runner = PooledAsyncRunner(pool, loss, dfed, acfg, bf,
+                                   key=k_state, capacity=lanes,
+                                   ring_self_weight=args.self_weight)
+        print(f"pooled async: m={m} capacity={lanes} "
+              f"speed={args.speed_model} (rounds are EVENTS)")
+    else:
+        if args.schedule == "random-walk":
+            psched = PoolSchedule.ring_random_walk(
+                m, horizon=max(args.rounds, 64), seed=args.seed)
+        elif args.schedule == "partial" and args.base_graph == "er":
+            # small-m only: dense base retained via the resident schedule
+            psched = PoolSchedule.from_schedule(build_topology(args, m))
+        else:
+            psched = PoolSchedule.ring_partial(m, lanes / m)
+        backend = "sparse" if args.mixer_impl == "sparse" else "dense"
+        # sync cohorts are globally ordered, so (client, round) keying is
+        # deterministic and prefetch-safe
+        bf = lambda idx, t: lm_client_batches(
+            k_data, idx, np.full(idx.shape, t, np.int32), **data_kw)
+        runner = PooledRunner(pool, psched, loss, dfed, bf, key=k_state,
+                              backend=backend)
+        print(f"pooled: m={m} schedule={psched.name} "
+              f"cohort={psched.cohort_size} backend={backend} "
+              f"(E[edges/round]={psched.expected_directed_edges():.1f})")
+
+    t0 = time.time()
+    metrics = {}
+    async_bits = 0.0
+    for t in range(args.rounds):
+        metrics = (runner.step_event() if args.async_gossip
+                   else runner.round())
+        if args.async_gossip:
+            async_bits += async_event_bits(
+                d, quant, live_edges=float(metrics["live_edges"]))
+        if args.ckpt_dir and not args.async_gossip \
+                and (t + 1) % args.ckpt_every == 0:
+            runner.save(args.ckpt_dir)
+        if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+            bits = async_bits if args.async_gossip else runner.comm_bits
+            print(f"round {t:4d} loss={float(metrics['loss']):.4f} "
+                  f"pool={pool.materialized}/{m} rows "
+                  f"({pool.nbytes/2**20:.1f}MB host) "
+                  f"comm={bits/8/2**20:.1f}MB ({time.time()-t0:.1f}s)")
+    print(f"done; {pool.materialized} of {m} clients materialized, "
+          f"{pool.nbytes/2**20:.1f}MB host params")
+    return runner, metrics
 
 
 def main(argv=None):
@@ -131,6 +218,18 @@ def main(argv=None):
                     help="staleness-adaptive local LR (--async-gossip): "
                          "a client lagging s local rounds trains with "
                          "eta/(1+decay*s); 0 disables")
+    ap.add_argument("--pool", action="store_true",
+                    help="virtual client pool: hold all --clients in a "
+                         "host-side COW parameter store and materialize "
+                         "only the round's cohort as device lanes — "
+                         "scales m to 1e5-1e6 on one host (ring base; "
+                         "schedules: partial, random-walk, or "
+                         "--async-gossip)")
+    ap.add_argument("--resident-lanes", type=int, default=None,
+                    help="device lanes for pooled execution (sync: the "
+                         "cohort size; async: the ready-set capacity); "
+                         "default sizes it from device memory via "
+                         "mesh.resident_lane_capacity")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None,
                     help="save RoundState every --ckpt-every rounds")
@@ -141,6 +240,11 @@ def main(argv=None):
     if args.reduced:
         cfg = make_reduced(cfg)
     cfg = dataclasses.replace(cfg, remat=False)
+    if args.pool:
+        # Branches BEFORE build_topology: pooled schedules on a ring base
+        # are constructed structurally, so no O(m^2) adjacency exists at
+        # m = 1e5-1e6.
+        return run_pooled(args, cfg)
     m = args.clients
 
     quant = QuantConfig(bits=args.bits) if args.bits < 32 else None
@@ -237,9 +341,18 @@ def main(argv=None):
                         else round_comm_bits(spec, d, quant))
     t0 = time.time()
     for t in range(args.rounds):
-        batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,
-                                   batch=args.batch, seq=args.seq,
-                                   vocab=cfg.vocab_size)
+        if acfg is not None:
+            # Async events are unordered across clients, so data must key
+            # on each client's OWN progress counter — a global round
+            # index would feed a client different batches whenever the
+            # fleet's interleaving changed (see data.lm_client_batches).
+            batches = lm_client_batches(
+                k_data, jnp.arange(m), state.version, K=args.local_steps,
+                batch=args.batch, seq=args.seq, vocab=cfg.vocab_size)
+        else:
+            batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,
+                                       batch=args.batch, seq=args.seq,
+                                       vocab=cfg.vocab_size)
         state, metrics = step(state, batches)
         if acfg is not None:
             ledger.add_bits(async_event_bits(

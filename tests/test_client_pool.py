@@ -1,0 +1,334 @@
+"""Virtual client pool: the host-backed store must be an EXECUTION
+DETAIL, not a different algorithm — pooled rounds replay the resident
+path BIT FOR BIT on the same seed.
+
+Pinned here:
+  * the COW slab store (template reads, geometric growth, version
+    monotonicity, duplicate-cohort rejection);
+  * pooled-vs-resident bitwise parity: fp32 and stochastic-q8, dense and
+    sparse(-reference) backends, exact partial cohorts and random walks,
+    both the dense-adjacency wrapper and the structural-ring
+    constructors, prefetch on and off;
+  * the O(m) structural replications (ring matching plan == the greedy
+    ``matching_steps`` coloring; the walk path == the resident
+    ``default_rng`` stream);
+  * checkpoint interop: save mid-run, restore, continue — bitwise equal
+    to the uninterrupted run (params AND versions);
+  * billing intactness: the pooled ledger bills the identical expected-
+    live-edge formula as ``schedule_round_bits``;
+  * the pooled ASYNC engine: params, versions, clock chain, and metrics
+    equal to the resident event engine under a straggler speed model.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncConfig, ClientPool, DFedAvgMConfig,
+                        MixingSpec, PoolSchedule, PooledAsyncRunner,
+                        PooledRunner, QuantConfig, SpeedModel,
+                        TopologySchedule, execute_plan_reference,
+                        init_async_state, init_round_state, local_train,
+                        make_round_step, ring_graph, ring_matching_src,
+                        schedule_round_bits)
+from repro.core.gossip_plan import matching_steps
+
+M, D = 12, 5
+CS = jax.random.normal(jax.random.PRNGKey(1), (M, D))
+loss_fn = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+BATCHES = {"c": jnp.broadcast_to(CS[:, None], (M, 4, D))}
+TEMPLATE = {"w": jnp.zeros((D,))}
+
+
+def batch_rows(idx, t):
+    return {"c": np.asarray(CS)[idx][:, None].repeat(4, 1)}
+
+
+def resident_final(cfg, sched, rounds=5):
+    step = jax.jit(make_round_step(loss_fn, cfg, sched))
+    st = init_round_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(7))
+    metrics = []
+    for _ in range(rounds):
+        st, mt = step(st, BATCHES)
+        metrics.append(mt)
+    return np.asarray(st.params["w"]), metrics
+
+
+def resident_sparse_ref_final(cfg, sched, rounds=5):
+    """make_round_step's skip path with the mixing done by
+    ``execute_plan_reference`` — the mesh-free spec of the sparse
+    backend, which the pooled "sparse" backend mirrors at cohort width."""
+    plan = sched.gossip_plan()
+    quant = cfg.quant
+    k_active = sched.static_active_count
+
+    @jax.jit
+    def rstep(params, rng, t):
+        key_round, key_mix, key_next = jax.random.split(rng, 3)
+        client_keys = jax.random.split(key_round, M)
+        W_t, active, key_q = sched.round_event(key_mix, t)
+        idx = jnp.nonzero(active, size=k_active, fill_value=M)[0]
+        safe = jnp.minimum(idx, M - 1)
+        train_one = lambda p, b, k: local_train(
+            loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta)
+        z_sub, _ = jax.vmap(train_one)(
+            jax.tree.map(lambda p: p[safe], params),
+            jax.tree.map(lambda b: b[safe], BATCHES), client_keys[safe])
+        z = jax.tree.map(lambda xl, zl: xl.at[idx].set(zl, mode="drop"),
+                         params, z_sub)
+        gate = lambda zl, xl: jnp.where(
+            active.reshape((-1,) + (1,) * (zl.ndim - 1)) > 0, zl, xl)
+        z_eff = jax.tree.map(gate, z, params)
+        if quant is None or not quant.enabled:
+            return execute_plan_reference(plan, W_t, z_eff), key_next
+        return execute_plan_reference(plan, W_t, z_eff, x=params,
+                                      quant=quant, key=key_q), key_next
+
+    params = {"w": jnp.zeros((M, D))}
+    rng = jax.random.PRNGKey(7)
+    for t in range(rounds):
+        params, rng = rstep(params, rng, t)
+    return np.asarray(params["w"])
+
+
+def pooled_final(cfg, psched, backend, rounds=5, prefetch=True):
+    pool = ClientPool(TEMPLATE, M)
+    runner = PooledRunner(pool, psched, loss_fn, cfg, batch_rows,
+                          key=jax.random.PRNGKey(7), backend=backend,
+                          prefetch=prefetch)
+    metrics = runner.run(rounds)
+    return np.asarray(pool.fetch(np.arange(M))["w"]), metrics, runner
+
+
+# ---------------------------------------------------------------------------
+# COW store
+# ---------------------------------------------------------------------------
+
+def test_pool_is_copy_on_write_and_version_monotonic():
+    pool = ClientPool(TEMPLATE, 1000)
+    assert pool.materialized == 0 and pool.nbytes == 0
+    assert (pool.fetch([5, 999])["w"] == 0).all()   # template reads
+    pool.writeback([5, 999], {"w": np.ones((2, D), np.float32)})
+    assert pool.materialized == 2
+    assert pool.versions[5] == 1 and pool.versions[999] == 1
+    assert pool.versions.sum() == 2                  # nobody else moved
+    assert (pool.fetch([5])["w"] == 1).all()
+    assert (pool.fetch([6])["w"] == 0).all()         # still virgin
+    pool.writeback([5], {"w": np.full((1, D), 2.0, np.float32)})
+    assert pool.versions[5] == 2 and pool.materialized == 2
+    with pytest.raises(ValueError, match="duplicate"):
+        pool.writeback([3, 3], {"w": np.ones((2, D), np.float32)})
+
+
+def test_pool_writeback_mask_restricts_rows_and_versions():
+    pool = ClientPool(TEMPLATE, 10)
+    pool.writeback([1, 2, 3], {"w": np.ones((3, D), np.float32)},
+                   mask=[True, False, True])
+    assert list(pool.versions[[1, 2, 3]]) == [1, 0, 1]
+    assert (pool.fetch([2])["w"] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Structural replications (no dense adjacency at pool scale)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [2, 3, 4, 5, 8, 11, 16, 37])
+def test_ring_matching_src_equals_greedy_coloring(m):
+    np.testing.assert_array_equal(ring_matching_src(m),
+                                  matching_steps(ring_graph(m).adj))
+
+
+@pytest.mark.parametrize("m", [2, 3, 8, 13])
+def test_structural_walk_equals_resident_stream(m):
+    sched = TopologySchedule.random_walk(ring_graph(m), horizon=128,
+                                         seed=5, start=1 % m)
+    ps = PoolSchedule.ring_random_walk(m, horizon=128, seed=5,
+                                       start=1 % m)
+    np.testing.assert_array_equal(np.asarray(sched.walk), ps.walk)
+
+
+def test_from_schedule_rejects_unbounded_cohorts():
+    with pytest.raises(ValueError, match="statically sized"):
+        PoolSchedule.from_schedule(
+            TopologySchedule.partial(ring_graph(M), 0.4))  # i.i.d.
+
+
+# ---------------------------------------------------------------------------
+# Pooled == resident, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", [True, False])
+def test_pooled_fp32_dense_bitwise_equals_resident(prefetch):
+    """The headline acceptance: same seed -> same cohorts -> same bits,
+    whether the cohort parameters were resident or fetched from the host
+    pool, and whether the next round was prefetched or fetched serially
+    (the overlap patch makes the prefetch invisible)."""
+    sched = TopologySchedule.partial(ring_graph(M), 0.34, exact=True)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
+    ref, rm = resident_final(cfg, sched)
+    for psched in (PoolSchedule.from_schedule(sched),
+                   PoolSchedule.ring_partial(M, 0.34)):
+        got, pm, _ = pooled_final(cfg, psched, "dense", prefetch=prefetch)
+        np.testing.assert_array_equal(got, ref)
+        for r in range(len(rm)):
+            assert float(rm[r]["loss"]) == float(pm[r]["loss"])
+            assert (float(rm[r]["active_frac"])
+                    == float(pm[r]["active_frac"]))
+
+
+def test_pooled_q8_dense_bitwise_equals_resident():
+    """Stochastic rounding draws its per-(leaf, client) keys at the FULL
+    logical width and gathers the cohort's rows, so the quantized wire —
+    and hence the params — match the resident run exactly."""
+    sched = TopologySchedule.partial(ring_graph(M), 0.34, exact=True)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                         quant=QuantConfig(bits=8))
+    ref, _ = resident_final(cfg, sched)
+    for psched in (PoolSchedule.from_schedule(sched),
+                   PoolSchedule.ring_partial(M, 0.34)):
+        got, _, _ = pooled_final(cfg, psched, "dense")
+        np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("quant", [None, QuantConfig(bits=8)],
+                         ids=["fp32", "q8"])
+def test_pooled_sparse_backend_bitwise_equals_plan_reference(quant):
+    """The pooled "sparse" backend remaps the full-width gossip plan onto
+    cohort lanes; off-cohort sources carry the resident's exact 0 weight,
+    so the per-step accumulation chain (and the quantized flat-wire
+    decode) reproduces ``execute_plan_reference`` bit for bit."""
+    sched = TopologySchedule.partial(ring_graph(M), 0.34, exact=True)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=quant)
+    ref = resident_sparse_ref_final(cfg, sched)
+    for psched in (PoolSchedule.from_schedule(sched),
+                   PoolSchedule.ring_partial(M, 0.34)):
+        got, _, _ = pooled_final(cfg, psched, "sparse")
+        np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("quant", [None, QuantConfig(bits=8)],
+                         ids=["fp32", "q8"])
+def test_pooled_random_walk_bitwise_equals_resident(quant):
+    sched = TopologySchedule.random_walk(ring_graph(M), horizon=64,
+                                         seed=3)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=quant)
+    ref, _ = resident_final(cfg, sched)
+    for psched in (PoolSchedule.from_schedule(sched),
+                   PoolSchedule.ring_random_walk(M, horizon=64, seed=3)):
+        got, _, _ = pooled_final(cfg, psched, "dense")
+        np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Billing intactness
+# ---------------------------------------------------------------------------
+
+def test_pooled_billing_equals_resident_schedule_bits():
+    sched = TopologySchedule.partial(ring_graph(M), 0.34, exact=True)
+    quant = QuantConfig(bits=8)
+    want = schedule_round_bits(sched, D, quant)
+    for psched in (PoolSchedule.from_schedule(sched),
+                   PoolSchedule.ring_partial(M, 0.34)):
+        assert psched.round_bits(D, quant) == want
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=quant)
+    _, _, runner = pooled_final(cfg, PoolSchedule.ring_partial(M, 0.34),
+                                "dense", rounds=3)
+    assert runner.comm_bits == 3 * want
+
+    wsched = TopologySchedule.random_walk(ring_graph(M), horizon=64,
+                                          seed=3)
+    assert (PoolSchedule.from_schedule(wsched).round_bits(D, quant)
+            == schedule_round_bits(wsched, D, quant))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint interop (satellite: io.py <-> pool)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [None, QuantConfig(bits=8)],
+                         ids=["fp32", "q8"])
+def test_save_restore_mid_run_continues_bitwise(quant):
+    """3 rounds + save + restore + 3 rounds == 6 uninterrupted rounds,
+    bit for bit — params, pool versions, and the comm ledger. The
+    prefetched buffer is deliberately NOT serialized: it is a pure
+    function of (rng, round, pool) and is rebuilt on restore."""
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=quant)
+    psched = PoolSchedule.ring_partial(M, 0.34)
+    ref, _, r0 = pooled_final(cfg, psched, "dense", rounds=6)
+    with tempfile.TemporaryDirectory() as d:
+        r1 = PooledRunner(ClientPool(TEMPLATE, M), psched, loss_fn, cfg,
+                          batch_rows, key=jax.random.PRNGKey(7))
+        r1.run(3)
+        r1.save(d)
+        r2 = PooledRunner.restore(d, TEMPLATE, psched, loss_fn, cfg,
+                                  batch_rows)
+        assert r2.t == 3 and r2.comm_bits == r1.comm_bits
+        r2.run(3)
+        np.testing.assert_array_equal(
+            np.asarray(r2.pool.fetch(np.arange(M))["w"]), ref)
+        np.testing.assert_array_equal(r2.pool.versions, r0.pool.versions)
+        assert r2.comm_bits == r0.comm_bits
+
+
+# ---------------------------------------------------------------------------
+# Pooled async engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [None, QuantConfig(bits=8)],
+                         ids=["fp32", "q8"])
+def test_pooled_async_bitwise_equals_resident_engine(quant):
+    """Ready-set cohorts (ready clients + their ring neighbors, sentinel-
+    padded to the static capacity) replay the resident event engine's
+    params, version counters, clock chain, and metrics exactly under a
+    straggler speed model with the staleness-eta decay on."""
+    M8 = 8
+    cs = jax.random.normal(jax.random.PRNGKey(2), (M8, D))
+    lf = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+    batches = {"c": jnp.broadcast_to(cs[:, None], (M8, 4, D))}
+    bf = lambda ids, vers: {"c": np.asarray(cs)[ids][:, None]
+                            .repeat(4, 1)}
+    spec = MixingSpec.ring(M8, self_weight=0.5)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4, quant=quant)
+    acfg = AsyncConfig(speed=SpeedModel.straggler(factor=4.0),
+                       max_staleness=3, eta_staleness_decay=0.3)
+
+    step = jax.jit(make_round_step(lf, cfg, spec, async_cfg=acfg))
+    st = init_async_state({"w": jnp.zeros((M8, D))},
+                          jax.random.PRNGKey(11), acfg.speed)
+    rm = []
+    for _ in range(8):
+        st, mt = step(st, batches)
+        rm.append(mt)
+
+    for kw in (dict(spec=spec), dict(ring_self_weight=0.5)):
+        pool = ClientPool(TEMPLATE, M8)
+        runner = PooledAsyncRunner(pool, lf, cfg, acfg, bf,
+                                   key=jax.random.PRNGKey(11),
+                                   capacity=M8, **kw)
+        pm = runner.run(8)
+        np.testing.assert_array_equal(
+            np.asarray(pool.fetch(np.arange(M8))["w"]),
+            np.asarray(st.params["w"]))
+        np.testing.assert_array_equal(runner.version,
+                                      np.asarray(st.version))
+        np.testing.assert_array_equal(pool.versions,
+                                      np.asarray(st.version))
+        np.testing.assert_array_equal(np.asarray(runner.next_ready),
+                                      np.asarray(st.next_ready))
+        for r in range(8):
+            for k in ("loss", "clock", "ready_frac", "live_edges"):
+                assert float(rm[r][k]) == float(pm[r][k]), (r, k)
+
+
+def test_pooled_async_capacity_overflow_raises():
+    pool = ClientPool(TEMPLATE, 8)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=2)
+    acfg = AsyncConfig(speed=SpeedModel.constant())  # all 8 fire at once
+    bf = lambda ids, vers: {"c": np.zeros((ids.size, 2, D), np.float32)}
+    runner = PooledAsyncRunner(pool, loss_fn, cfg, acfg, bf,
+                               key=jax.random.PRNGKey(0), capacity=4,
+                               ring_self_weight=0.5)
+    with pytest.raises(RuntimeError, match="capacity"):
+        runner.step_event()

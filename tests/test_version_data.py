@@ -1,0 +1,99 @@
+"""Version-keyed data pipelines (the async data-ordering fix).
+
+The asynchronous engine fires clients in clock order, not round order, so
+a pipeline keyed on the GLOBAL event index feeds a client different data
+whenever the fleet's interleaving changes — a silent non-determinism bug
+(two runs that execute the same per-client work in a different global
+order trained on different batches). The fix: key each client's stream on
+its OWN completed-update counter (the version the engine already carries,
+and the quantity the pool's write-back bumps). Pinned here:
+
+  * ``lm_client_batches`` is a pure function of (key, client_id,
+    version): permuting the query order permutes the output rows and
+    nothing else, and the surrounding fleet is invisible;
+  * the global-index keying it replaces really is order-sensitive (the
+    regression this guards against);
+  * the engine wiring: ``make_async_round_step(..., batch_fn=...)``
+    consumes exactly ``batch_fn(arange(m), state.version)`` each event,
+    so two engines — one self-feeding, one hand-fed the version-keyed
+    batches — stay bit-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AsyncConfig, DFedAvgMConfig, MixingSpec,
+                        SpeedModel, init_async_state, make_round_step)
+from repro.core.async_gossip import make_async_round_step
+from repro.data import lm_client_batches, lm_round_batches
+
+KW = dict(K=2, batch=3, seq=8, vocab=50)
+KEY = jax.random.PRNGKey(42)
+
+
+def test_client_batches_are_order_and_fleet_invariant():
+    ids = jnp.asarray([4, 0, 9, 2])
+    vers = jnp.asarray([1, 0, 3, 1])
+    full = lm_client_batches(KEY, ids, vers, **KW)
+    perm = np.asarray([2, 0, 3, 1])
+    shuffled = lm_client_batches(KEY, ids[perm], vers[perm], **KW)
+    for k in ("tokens", "targets"):
+        np.testing.assert_array_equal(np.asarray(shuffled[k]),
+                                      np.asarray(full[k])[perm])
+    # the rest of the fleet is invisible: querying client 9 alone gives
+    # the same batch it got inside the cohort
+    alone = lm_client_batches(KEY, jnp.asarray([9]), jnp.asarray([3]),
+                              **KW)
+    np.testing.assert_array_equal(np.asarray(alone["tokens"][0]),
+                                  np.asarray(full["tokens"][2]))
+
+
+def test_client_batches_advance_with_version_only():
+    ids = jnp.asarray([3, 3])
+    a, b = np.asarray(lm_client_batches(
+        KEY, ids, jnp.asarray([0, 1]), **KW)["tokens"])
+    assert (a != b).any()          # the stream does advance
+    again = np.asarray(lm_client_batches(
+        KEY, jnp.asarray([3]), jnp.asarray([0]), **KW)["tokens"][0])
+    np.testing.assert_array_equal(again, a)   # and is replayable
+
+
+def test_global_index_keying_is_order_sensitive():
+    """The bug this file guards against: ``lm_round_batches`` keyed on a
+    global counter gives client 0 DIFFERENT data when an unrelated event
+    shifts the counter — exactly what reordering async events does."""
+    b_at_5 = np.asarray(lm_round_batches(KEY, 5, m=4, **KW)["tokens"][0])
+    b_at_6 = np.asarray(lm_round_batches(KEY, 6, m=4, **KW)["tokens"][0])
+    assert (b_at_5 != b_at_6).any()
+
+
+def test_async_engine_batch_fn_is_version_keyed():
+    """Self-feeding engine == hand-fed engine given the same version
+    counters, bit for bit — so permuting the fleet's event interleaving
+    cannot change which batch a client trains on at a given version."""
+    M, V = 6, 50
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    cfg = DFedAvgMConfig(eta=0.3, theta=0.5, local_steps=2)
+    acfg = AsyncConfig(speed=SpeedModel.straggler(factor=4.0))
+
+    def loss_fn(p, b, r):
+        logits = b["tokens"][..., None] * 0.01 + p["w"]
+        onehot = jax.nn.one_hot(b["targets"], V)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    params = {"w": jnp.zeros((M, V))}
+    bf = lambda ids, vers: lm_client_batches(KEY, ids, vers, **{**KW,
+                                                                "vocab": V})
+    step_auto = jax.jit(make_async_round_step(loss_fn, cfg, spec, acfg,
+                                              batch_fn=bf))
+    step_manual = jax.jit(make_round_step(loss_fn, cfg, spec,
+                                          async_cfg=acfg))
+    sa = init_async_state(params, jax.random.PRNGKey(0), acfg.speed)
+    sm = init_async_state(params, jax.random.PRNGKey(0), acfg.speed)
+    for _ in range(6):
+        sa, _ = step_auto(sa)
+        sm, _ = step_manual(sm, bf(jnp.arange(M), sm.version))
+        np.testing.assert_array_equal(np.asarray(sa.params["w"]),
+                                      np.asarray(sm.params["w"]))
+        np.testing.assert_array_equal(np.asarray(sa.version),
+                                      np.asarray(sm.version))

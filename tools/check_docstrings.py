@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Docstring lint for public APIs (CI gate).
+
+Every module under the given paths must carry a module docstring, and
+every PUBLIC top-level function and class (no leading underscore) must
+carry its own. This is the guard the architecture docs lean on: the
+invariants live in the docstrings (``core/gossip_plan.py``,
+``core/wire_layout.py``, ``core/async_gossip.py``, ``core/client_pool.py``
+state theirs at module level), so an undocumented public API is a CI
+failure, not a review nit.
+
+Usage:  python tools/check_docstrings.py src/repro/core [more paths...]
+
+Exit status 1 lists every offender as ``path:line: kind name``. Methods
+are exempt (class docstrings carry the contract); private helpers are
+exempt by the underscore convention.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+
+def check_file(path: Path) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    problems = []
+    if ast.get_docstring(tree) is None:
+        problems.append(f"{path}:1: module lacks a docstring")
+    for node in tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if ast.get_docstring(node) is None:
+            kind = ("class" if isinstance(node, ast.ClassDef)
+                    else "function")
+            problems.append(f"{path}:{node.lineno}: public {kind} "
+                            f"{node.name!r} lacks a docstring")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    files: list[Path] = []
+    for arg in argv:
+        p = Path(arg)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    problems = []
+    for f in files:
+        problems.extend(check_file(f))
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} undocumented public API(s) in "
+              f"{len(files)} file(s)", file=sys.stderr)
+        return 1
+    print(f"docstring lint: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
