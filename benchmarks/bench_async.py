@@ -21,6 +21,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +74,16 @@ def run_compare(m=8, K=2, batch=32, rounds=40, eta=0.05, theta=0.9,
         lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), p0)
 
     # --- synchronous arm: the barrier bills max_i duration_i per round ---
-    step = jax.jit(make_round_step(loss_2nn, cfg, sched))
-    st = init_round_state(stacked, jax.random.PRNGKey(seed + 1))
+    # Donate the round state: ``st`` is rebound every round, so XLA may
+    # update the stacked params/momentum HBM in place (a no-op warning on
+    # CPU hosts). The async arm below gets COPIES of ``stacked`` — the
+    # donated first state would otherwise free the shared init buffers.
+    warnings.filterwarnings("ignore",
+                            message="Some donated buffers were not usable")
+    step = jax.jit(make_round_step(loss_2nn, cfg, sched),
+                   donate_argnums=(0,))
+    st = init_round_state(jax.tree.map(jnp.copy, stacked),
+                          jax.random.PRNGKey(seed + 1))
     clock_key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), 7)
     sync_t, sync_loss, t_virtual = [], [], 0.0
     for t in range(rounds):
@@ -86,8 +95,10 @@ def run_compare(m=8, K=2, batch=32, rounds=40, eta=0.05, theta=0.9,
 
     # --- asynchronous arm: same speed model, no barrier ------------------
     acfg = AsyncConfig(speed=speed, max_staleness=max_staleness)
-    engine = jax.jit(make_async_engine(loss_2nn, cfg, sched, acfg))
-    ast = init_async_state(stacked, jax.random.PRNGKey(seed + 1), speed)
+    engine = jax.jit(make_async_engine(loss_2nn, cfg, sched, acfg),
+                     donate_argnums=(0,))
+    ast = init_async_state(jax.tree.map(jnp.copy, stacked),
+                           jax.random.PRNGKey(seed + 1), speed)
     async_t, async_loss = [], []
     for chunk in range(rounds):
         evs = [fed.round_batches(chunk * m + e, K=K, batch=batch, seed=seed)

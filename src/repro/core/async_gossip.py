@@ -109,12 +109,12 @@ class AsyncConfig:
                    staleness discount on the WEIGHTS, which this composes
                    with). 0 disables; with zero lag (constant speed) the
                    scale is exactly 1, so the sync-reproduction guarantee
-                   is untouched (see :func:`staleness_eta`). Caveat: the
-                   per-client eta is traced, which the fused Pallas
-                   momentum kernel cannot take (static eta) — with decay
-                   on, local SGD uses the plain XLA update, so a sync run
-                   built with ``fused_update`` matches to kernel-vs-XLA
-                   rounding (~ulp), not bitwise.
+                   is untouched (see :func:`staleness_eta`). The per-client
+                   eta is traced; the fused Pallas momentum kernel takes
+                   eta/theta as RUNTIME scalar operands, so the decayed
+                   path runs the same kernel as the fixed-eta path (the
+                   client vmap batches the scalar block) — no XLA
+                   fallback, no retrace per eta value.
     """
 
     speed: SpeedModel = SpeedModel.constant()
@@ -284,15 +284,16 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             # Staleness-adaptive local LR: lagging clients train with a
             # damped step (lag derived from the PRE-event versions; zero
             # lag scales by exactly 1, keeping constant-speed runs bit-
-            # identical to the fixed-eta graph's values). The fused
-            # Pallas momentum kernel bakes eta in as a STATIC argument,
-            # so the per-client traced eta must take the plain XLA
-            # update instead.
+            # identical to the fixed-eta graph's values). eta is a
+            # RUNTIME operand of the fused Pallas momentum kernel, so the
+            # per-client traced eta runs the same fused update as the
+            # fixed-eta path (vmap batches the scalar block) — no XLA
+            # fallback.
             etas = staleness_eta(cfg.eta, state.version,
                                  async_cfg.eta_staleness_decay)
             train_one = lambda p, b, k, e: local_train(
                 loss_fn, p, b, k, eta=e, theta=cfg.theta,
-                fused_update=None)
+                fused_update=fused_update)
             z, losses = jax.vmap(train_one)(state.params, batches,
                                             client_keys, etas)
         else:

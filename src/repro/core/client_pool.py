@@ -52,6 +52,7 @@ Invariants (pinned by ``tests/test_client_pool.py``):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable
 
@@ -613,8 +614,14 @@ def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         }
         return x_next, metrics
 
+    # Donate the cohort's staged parameters: the runner never reads
+    # ``cur["x"]`` after the step (write-back uses the OUTPUT, and the
+    # prefetch patch targets the NEXT cohort's buffer), so x_sub's device
+    # slab is recycled for x_next instead of allocating a second copy.
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
     return PooledRoundStep(inputs=jax.jit(inputs),
-                           step=jax.jit(step, static_argnames=()))
+                           step=jax.jit(step, donate_argnums=(0,)))
 
 
 # ---------------------------------------------------------------------------
@@ -786,9 +793,13 @@ class PooledAsyncRunner:
         def event_body(x_sub, batches, ck_sub, idx, v_sub, ready_sub,
                        valid, ready_total, key_q, leaf_keys_sub, etas_sub):
             if eta_decay > 0.0:
+                # Per-client traced etas flow straight into the fused
+                # Pallas update: eta/theta are runtime scalar operands of
+                # the kernel, so the staleness-adaptive path no longer
+                # falls back to the unfused XLA update.
                 train_one = lambda p, b, kk, e: local_train(
                     loss_fn, p, b, kk, eta=e, theta=cfg.theta,
-                    fused_update=None)
+                    fused_update=fused_update)
                 z_sub, losses = jax.vmap(train_one)(x_sub, batches, ck_sub,
                                                     etas_sub)
             else:
@@ -833,7 +844,11 @@ class PooledAsyncRunner:
             }
             return x_next, metrics
 
-        self._step = jax.jit(event_body)
+        # x_sub is dead after the event (write-back reads x_next); donate
+        # it so the cohort slab is reused in place.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        self._step = jax.jit(event_body, donate_argnums=(0,))
         self._client_keys = jax.jit(lambda kr: jax.random.split(kr, m))
         self._leaf_keys = jax.jit(
             lambda kq: _quant_leaf_keys(kq, self._n_leaves, m))

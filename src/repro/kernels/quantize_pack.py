@@ -79,6 +79,88 @@ def quantize_pack_buffer_pallas(x2d: jnp.ndarray, s_blocks: jnp.ndarray,
     )(x2d, noise, s_blocks.astype(jnp.float32))
 
 
+def _momentum_quantize_pack_kernel(y_ref, v_ref, g_ref, x_ref, noise_ref,
+                                   s_ref, et_ref, y_out, v_out, w_out, *,
+                                   bits: int, stochastic: bool):
+    """Fused final-local-step + encode: apply the round's last heavy-ball
+    update and emit the wire words as a SIDE OUTPUT of the same pass —
+
+        v' = theta * v - eta * g ;  y' = y + v' ;  delta = y' - x ;
+        words = pack(Q(delta / s))
+
+    instead of a momentum pass (3R+2W of N) followed by a separate
+    quantize+pack pass over the planar buffer (2R+W/4 more). One read of
+    (y, v, g, x), one write of (y', v', words): the wire buffer never
+    costs its own trip over the model. eta/theta ride a runtime [1, 2]
+    scalar block like ``momentum_sgd``'s.
+    """
+    per = 32 // bits
+    qmin = -(2 ** (bits - 1))
+    qmax = 2 ** (bits - 1) - 1
+    eta = et_ref[0, 0]
+    theta = et_ref[0, 1]
+    v_next = (theta * v_ref[...].astype(jnp.float32)
+              - eta * g_ref[...].astype(jnp.float32))
+    y_next = y_ref[...].astype(jnp.float32) + v_next
+    delta = y_next - x_ref[...].astype(jnp.float32)
+    s = s_ref[0, 0]
+    a = delta / s                            # [per, LANE_BLOCK] f32
+    k = jnp.floor(a)
+    if stochastic:
+        k = k + (noise_ref[...] < (a - k)).astype(jnp.float32)
+    k = jnp.clip(k, qmin, qmax).astype(jnp.int32)
+    fields = (k + (1 << (bits - 1))).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (per, 1), 0) * bits
+    y_out[...] = y_next.astype(y_out.dtype)
+    v_out[...] = v_next.astype(v_out.dtype)
+    w_out[...] = (fields << shifts).sum(axis=0, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "stochastic", "interpret"))
+def momentum_quantize_pack_buffer_pallas(
+        y2d: jnp.ndarray, v2d: jnp.ndarray, g2d: jnp.ndarray,
+        x2d: jnp.ndarray, s_blocks: jnp.ndarray, noise: jnp.ndarray,
+        et: jnp.ndarray, *, bits: int, stochastic: bool,
+        interpret: bool = False
+        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused-round encoder: the final applied local step and the whole
+    planar wire buffer in ONE ``pallas_call``.
+
+    y2d/v2d/g2d/x2d: [per, W] f32 planar buffers (y, v of the last applied
+    step's inputs; g its gradient; x the round's held params); s_blocks:
+    f32 [1, W // LANE_BLOCK] per-lane-block scales of the RESULTING delta
+    (computed by the caller from the same expression — a reduction, not a
+    full-size write); noise: [per, W] (ignored unless stochastic); et: f32
+    [2] = (eta, theta), runtime (traced OK). Returns (y' [per, W],
+    v' [per, W], words uint32 [W]). Pack math and layout are identical to
+    :func:`quantize_pack_buffer_pallas`; the oracle is
+    ``kernels.ref.momentum_quantize_pack_buffer_ref``.
+    """
+    per, w = y2d.shape
+    assert per == 32 // bits and w % LANE_BLOCK == 0, (per, w)
+    n_blocks = w // LANE_BLOCK
+    assert s_blocks.shape == (1, n_blocks), (s_blocks.shape, n_blocks)
+    kernel = functools.partial(_momentum_quantize_pack_kernel, bits=bits,
+                               stochastic=stochastic)
+    buf = pl.BlockSpec((per, LANE_BLOCK), lambda i: (0, i))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            buf, buf, buf, buf, buf,
+            pl.BlockSpec((1, 1), lambda i: (0, i)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=(buf, buf, pl.BlockSpec((LANE_BLOCK,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct(y2d.shape, y2d.dtype),
+                   jax.ShapeDtypeStruct(v2d.shape, v2d.dtype),
+                   jax.ShapeDtypeStruct((w,), jnp.uint32)),
+        interpret=interpret,
+    )(y2d, v2d, g2d, x2d, noise, s_blocks.astype(jnp.float32),
+      et.reshape(1, 2).astype(jnp.float32))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bits", "stochastic", "interpret"))
 def quantize_pack_pallas(x2d: jnp.ndarray, s: jnp.ndarray,

@@ -150,6 +150,22 @@ def jaxpr_costs(jaxpr: jcore.Jaxpr) -> Costs:
             subs = [jaxpr_costs(b.jaxpr) for b in eqn.params["branches"]]
             worst = max(subs, key=lambda c: c.flops) if subs else Costs()
             total.add(worst)
+        elif name == "pallas_call":
+            # A fused kernel's HBM traffic IS its operand/output buffers:
+            # each input is streamed in once and each output written once
+            # no matter how many eqns the kernel body holds — that is the
+            # point of fusing. The body's per-block intermediates live in
+            # registers/VMEM, so count the eqn's buffer bytes and only
+            # take flops (x grid) from the body.
+            total.bytes += _eqn_bytes(eqn)
+            grid = getattr(eqn.params.get("grid_mapping"), "grid", ())
+            try:
+                mult = float(np.prod([int(g) for g in grid])) if grid \
+                    else 1.0
+            except Exception:  # noqa: BLE001  (symbolic grid dim)
+                mult = 1.0
+            for sub in _sub_jaxprs(eqn):
+                total.flops += jaxpr_costs(sub.jaxpr).flops * mult
         elif name in _COLL_PRIMS:
             kind = _COLL_PRIMS[name]
             wire = sum(_size(v.aval) for v in eqn.invars

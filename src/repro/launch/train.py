@@ -180,6 +180,13 @@ def main(argv=None):
                          "by backend")
     ap.add_argument("--self-weight", type=float, default=0.5,
                     help="ring self weight (0.5 => PSD W, safe for Alg. 2)")
+    ap.add_argument("--fuse-round", action="store_true",
+                    help="fused overlapped round variant: the last local "
+                         "step is folded into the wire encode, the final "
+                         "gradient computes inside the gossip window, and "
+                         "mix + momentum apply in one decode pass (needs "
+                         "--local-steps >= 2; a different algorithm "
+                         "variant, not bit-identical to the default)")
     ap.add_argument("--schedule", default="static",
                     choices=["static", "constant", "edge-sample", "partial",
                              "random-walk", "cycle"],
@@ -272,7 +279,8 @@ def main(argv=None):
     client_axes = ("clients",) if mesh is not None else ()
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
                           local_steps=args.local_steps, quant=quant,
-                          mixer_impl=impl, wire=args.wire)
+                          mixer_impl=impl, wire=args.wire,
+                          fuse_round=args.fuse_round)
     scheduled = isinstance(spec, TopologySchedule)
     plan = None
     if impl == "sparse":

@@ -215,23 +215,33 @@ def test_eta_decay_constant_speed_still_bit_identical_to_sync():
 
 
 def test_eta_decay_works_with_fused_momentum_update():
-    """The per-client adaptive eta is a TRACED scalar, which the fused
-    Pallas momentum kernel cannot take (its eta is a static jit arg) —
-    the decay branch must fall back to the plain XLA update instead of
-    crashing."""
+    """The per-client adaptive eta is a TRACED scalar AND a runtime
+    operand of the fused Pallas momentum kernel — the decay branch runs
+    the SAME kernel as the fixed-eta path (no XLA fallback, asserted on
+    the jaxpr) and matches the plain-update trajectory to ~ulp."""
     from repro.kernels.ops import make_fused_momentum_update
     _, loss_fn, batches = quad_problem()
     cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4)
     acfg = AsyncConfig(speed=SpeedModel.straggler(factor=4.0),
                        eta_staleness_decay=0.1)
-    step = jax.jit(make_round_step(
-        loss_fn, cfg, MixingSpec.ring(M, self_weight=0.5), async_cfg=acfg,
-        fused_update=make_fused_momentum_update()))
-    st = init_async_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(0),
-                          acfg.speed)
+    spec = MixingSpec.ring(M, self_weight=0.5)
+    step_f = jax.jit(make_round_step(
+        loss_fn, cfg, spec, async_cfg=acfg,
+        fused_update=make_fused_momentum_update(interpret=True)))
+    step_x = jax.jit(make_round_step(loss_fn, cfg, spec, async_cfg=acfg))
+    st0 = init_async_state({"w": jnp.zeros((M, D))}, jax.random.PRNGKey(0),
+                           acfg.speed)
+    jaxpr = jax.make_jaxpr(step_f)(st0, batches)
+    assert "pallas_call" in str(jaxpr), (
+        "traced-eta async path fell off the Pallas momentum kernel")
+    st_f, st_x = st0, st0
     for _ in range(3):
-        st, mt = step(st, batches)
-    assert np.isfinite(np.asarray(st.params["w"])).all()
+        st_f, _ = step_f(st_f, batches)
+        st_x, _ = step_x(st_x, batches)
+    w_f = np.asarray(st_f.params["w"])
+    assert np.isfinite(w_f).all()
+    np.testing.assert_allclose(w_f, np.asarray(st_x.params["w"]),
+                               atol=1e-6)
 
 
 def test_eta_decay_damps_stragglers():
