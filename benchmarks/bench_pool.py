@@ -28,7 +28,6 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-import time
 import warnings
 
 import jax
@@ -42,6 +41,13 @@ from repro.launch.hlo_stats import traced_flops
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 POOL_JSON = REPO / "BENCH_pool.json"
+
+try:
+    from .common import timeit_best
+except ImportError:  # standalone: python benchmarks/bench_pool.py
+    import sys
+    sys.path.insert(0, str(REPO))
+    from benchmarks.common import timeit_best
 
 D_HID = 32
 
@@ -75,12 +81,9 @@ def _problem(d=D_HID):
 
 
 def _rounds_per_sec(runner, n_rounds, warmup=2):
-    for _ in range(warmup):
-        runner.round()
-    t0 = time.perf_counter()
-    for _ in range(n_rounds):
-        runner.round()
-    return n_rounds / (time.perf_counter() - t0)
+    us, _ = timeit_best(lambda i, _: runner.round(), None,
+                        iters=n_rounds, reps=1, warmup=warmup)
+    return 1e6 / us
 
 
 def run(smoke: bool = False):
@@ -128,22 +131,20 @@ def run(smoke: bool = False):
         jax.tree.map(lambda l: jnp.broadcast_to(l[None],
                                                 (m_cmp,) + l.shape),
                      template), jax.random.PRNGKey(7))
-    for t in range(warmup):                 # compile + warm cache
-        st, _ = step(st, bf(np.arange(m_cmp), t))
-    jax.block_until_ready(st.params)
-    t0 = time.perf_counter()
-    for t in range(warmup, warmup + n_cmp):
-        st, _ = step(st, bf(np.arange(m_cmp), t))
-    jax.block_until_ready(st.params)
-    resident_rps = n_cmp / (time.perf_counter() - t0)
+    # timeit_best's global call index IS the round number, so the
+    # (client, round)-keyed batches stay on the exact resident sequence
+    # across warmup and the timed span.
+    us_resident, st = timeit_best(
+        lambda t, st: step(st, bf(np.arange(m_cmp), t))[0], st,
+        iters=n_cmp, reps=1, warmup=warmup)
+    resident_rps = 1e6 / us_resident
 
     psched = PoolSchedule.ring_partial(m_cmp, k_cmp / m_cmp)
     runner = PooledRunner(ClientPool(template, m_cmp), psched, loss_fn,
                           cfg, bf, key=jax.random.PRNGKey(7))
-    runner.run(warmup)                      # same rounds as resident
-    t0 = time.perf_counter()
-    runner.run(n_cmp)
-    pooled_rps = n_cmp / (time.perf_counter() - t0)
+    us_pooled, _ = timeit_best(lambda i, _: runner.round(), None,
+                               iters=n_cmp, reps=1, warmup=warmup)
+    pooled_rps = 1e6 / us_pooled
 
     # same seed, same rounds -> the pooled store must be bit-identical
     got = runner.pool.fetch(np.arange(m_cmp))

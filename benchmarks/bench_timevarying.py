@@ -66,7 +66,10 @@ def _run_json_subprocess(src: str, devices: int) -> dict:
     env["XLA_FLAGS"] = (
         env.get("XLA_FLAGS", "") +
         f" --xla_force_host_platform_device_count={devices}").strip()
-    env["PYTHONPATH"] = str(REPO / "src")
+    # src for repro, the repo root for benchmarks.common.timeit_best —
+    # the subprocess arms time themselves with the same primitive as the
+    # in-process benches.
+    env["PYTHONPATH"] = os.pathsep.join([str(REPO / "src"), str(REPO)])
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(src)],
                        capture_output=True, text=True, timeout=900, env=env)
     if r.returncode != 0:
@@ -77,9 +80,10 @@ def _run_json_subprocess(src: str, devices: int) -> dict:
 
 
 _COMPARE_SRC = """
-    import json, time, warnings
+    import json, warnings
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from benchmarks.common import timeit_best
     from repro.core import (MixerConfig, QuantConfig, TopologySchedule,
                             make_mixer, plan_round_bits,
                             schedule_round_bits)
@@ -118,13 +122,8 @@ _COMPARE_SRC = """
             r = jax.block_until_ready(fn(x, z, key, 0))   # warmup/compile
             # Best-of-3 timing reps: the CI perf gate compares arms, and a
             # single scheduler hiccup on the shared runner must not flip it.
-            us = float("inf")
-            for _ in range(3):
-                t0 = time.perf_counter()
-                for t in range(iters):
-                    r = fn(r, z, key, t)
-                jax.block_until_ready(r)
-                us = min(us, (time.perf_counter() - t0) / iters * 1e6)
+            us, r = timeit_best(lambda t, r: fn(r, z, key, t), r,
+                                iters=iters, reps=3)
             arm = {{
                 "wire_bytes_per_device": stats["wire_bytes"],
                 "collectives": stats["counts"],
@@ -148,9 +147,10 @@ _COMPARE_SRC = """
 
 
 _BLOCK_SRC = """
-    import json, time, warnings
+    import json, warnings
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from benchmarks.common import timeit_best
     from repro.core import (MixerConfig, QuantConfig, TopologySchedule,
                             make_mixer, plan_round_bits)
     from repro.core.topology import ring_graph
@@ -187,13 +187,8 @@ _BLOCK_SRC = """
             txt = fn.lower(x, z, key, 0).compile().as_text()
             stats = collect_collectives(txt).as_dict()
             r = jax.block_until_ready(fn(x, z, key, 0))
-            us = float("inf")
-            for _ in range(3):
-                t0 = time.perf_counter()
-                for t in range(iters):
-                    r = fn(r, z, key, t)
-                jax.block_until_ready(r)
-                us = min(us, (time.perf_counter() - t0) / iters * 1e6)
+            us, r = timeit_best(lambda t, r: fn(r, z, key, t), r,
+                                iters=iters, reps=3)
             arm = {{"wire_bytes_per_device": stats["wire_bytes"],
                     "collectives": stats["counts"],
                     "us_per_round": us}}
@@ -211,9 +206,10 @@ _BLOCK_SRC = """
 
 
 _FUSED_SRC = """
-    import json, time, warnings
+    import json, warnings
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import Mesh
+    from benchmarks.common import timeit_best
     from repro.core import MixingSpec, QuantConfig
     from repro.core.comm_cost import plan_round_bits
     from repro.core.dfedavgm import (DFedAvgMConfig, init_round_state,
@@ -322,16 +318,15 @@ _FUSED_SRC = """
                      "roofline_ratio": costs.bytes / bytes_min}}
     # INTERLEAVED best-of-5: alternating the arms inside every rep puts
     # both on the same scheduler weather, so host noise cancels out of
-    # the fused-vs-unfused CI comparison instead of flipping it.
+    # the fused-vs-unfused CI comparison instead of flipping it
+    # (timeit_best at reps=1 per arm per alternation, min() across).
     for _ in range(5):
         for arm in ("unfused", "fused"):
             a = arms[arm]
-            st, t0 = a["st"], time.perf_counter()
-            for _ in range(iters):
-                st, _ = a["step"](st, batches)
-            jax.block_until_ready(st.params)
-            a["us"] = min(a["us"], (time.perf_counter() - t0) / iters * 1e6)
-            a["st"] = st
+            us, a["st"] = timeit_best(
+                lambda i, st, step=a["step"]: step(st, batches)[0],
+                a["st"], iters=iters, reps=1)
+            a["us"] = min(a["us"], us)
     for arm in ("unfused", "fused"):
         out[arm]["us_per_round"] = arms[arm]["us"]
     out["fused_speedup"] = (out["unfused"]["us_per_round"]
@@ -358,6 +353,62 @@ def fused_round_compare(smoke: bool = False) -> dict:
     iters = 5 if smoke else 20
     return _run_json_subprocess(
         _FUSED_SRC.format(m=m, d=d, K=K, iters=iters), m)
+
+
+def telemetry_overhead_compare(smoke: bool = False) -> dict:
+    """with_telemetry=True vs the plain round on a representative
+    training round (the paper's 2NN, q8 stochastic, edge-sampled ring):
+    the telemetry pytree adds a consensus reduction and a full quantizer
+    replay, and the CI gate holds the wall-clock overhead at <= 1.10x.
+    The replay is a fixed cost per round (one extra codec pass over the
+    m*d wire deltas), so the batch is sized (64) to make local SGD carry
+    its training-realistic share of the round — at toy batch sizes the
+    codec dominates the round and the ratio measures the codec against
+    itself. Interleaved best-of-7 (``timeit_best`` at reps=1 per
+    alternation) so shared-runner noise cancels out of the gated ratio.
+    Lands under the ``telemetry`` key of BENCH_gossip.json."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (DFedAvgMConfig, init_round_state,
+                            make_round_step)
+    from repro.data import FederatedDataset, classification_dataset
+    from repro.models.paper_nets import init_2nn
+
+    try:
+        from .common import loss_2nn, timeit_best
+    except ImportError:
+        from benchmarks.common import loss_2nn, timeit_best
+
+    m, K, batch = 16, 4, 64
+    iters = 3 if smoke else 10
+    data = classification_dataset(n=2000 if smoke else 8000, seed=0)
+    fed = FederatedDataset.make(data, m, iid=True, seed=0)
+    batches = fed.round_batches(0, K=K, batch=batch, seed=0)
+    sched = TopologySchedule.edge_sample(ring_graph(m), p_edge=0.5)
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.9, local_steps=K,
+                         quant=QuantConfig(bits=8))
+    p0 = init_2nn(jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), p0)
+    arms = {}
+    for name, wt in (("off", False), ("on", True)):
+        step = jax.jit(make_round_step(loss_2nn, cfg, sched,
+                                       with_telemetry=wt))
+        st = init_round_state(stacked, jax.random.PRNGKey(1))
+        st, mt = step(st, batches)                      # compile
+        jax.block_until_ready(mt["loss"])
+        arms[name] = {"step": step, "st": st, "us": float("inf")}
+    for _ in range(7):
+        for name in ("off", "on"):
+            a = arms[name]
+            us, a["st"] = timeit_best(
+                lambda i, st, step=a["step"]: step(st, batches)[0],
+                a["st"], iters=iters, reps=1)
+            a["us"] = min(a["us"], us)
+    return {"m": m, "K": K, "bits": 8, "batch": batch,
+            "us_off": arms["off"]["us"], "us_on": arms["on"]["us"],
+            "overhead_ratio": arms["on"]["us"] / arms["off"]["us"]}
 
 
 def block_gossip_compare(smoke: bool = False) -> dict:
@@ -400,6 +451,8 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     # Fused-round arm: the overlapped variant against the default round
     # on the same mesh, with the roofline columns CI gates on.
     res["fused"] = fused_round_compare(smoke=smoke)
+    # Telemetry-overhead arm: with_telemetry on vs off, gated <= 1.10x.
+    res["telemetry"] = telemetry_overhead_compare(smoke=smoke)
     GOSSIP_JSON.write_text(json.dumps(res, indent=2))
     rows = []
     for bits in (32, 8):
@@ -433,6 +486,12 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
         f"fused_roofline={fz['fused']['roofline_ratio']:.2f}|"
         f"unfused_roofline={fz['unfused']['roofline_ratio']:.2f}|"
         f"bytes_saved_frac={fz['fused_bytes_saved_frac']:.3f}"))
+    tl = res["telemetry"]
+    rows.append((
+        "round_telemetry_on_vs_off",
+        tl["us_on"],
+        f"off_us={tl['us_off']:.1f}|"
+        f"overhead_ratio={tl['overhead_ratio']:.3f}"))
     return rows
 
 

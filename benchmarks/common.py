@@ -32,6 +32,44 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def timeit_best(body, carry=None, *, iters: int = 1, reps: int = 3,
+                warmup: int = 0, tracer=None, label: str = "timeit"):
+    """Best-of-``reps`` wall time of a stateful loop body — THE timing
+    primitive of every compare-arm bench (best-of-N absorbs scheduler
+    hiccups on shared CI runners that a mean or single shot would fold
+    into the gated ratio).
+
+    ``body(i, carry) -> carry`` is called with a monotonically increasing
+    global call index ``i`` (so bodies that key data or PRNG folds on the
+    round number keep their exact sequence across warmup and reps) and
+    the threaded carry (round state, runner handle, ...). Each rep times
+    ``iters`` calls and blocks on the carry; ``warmup`` extra calls run
+    (and are blocked on) first. For interleaved A/B arms, call with
+    ``reps=1`` inside your own alternation loop and min() outside.
+
+    Returns ``(best_us_per_call, carry)``. ``tracer`` (a
+    ``repro.telemetry.Tracer``) wraps each rep in a ``label`` span.
+    """
+    i = 0
+    for _ in range(warmup):
+        carry = body(i, carry)
+        i += 1
+    if warmup:
+        jax.block_until_ready(carry)
+    if tracer is None:
+        from repro.telemetry import NULL_TRACER as tracer
+    best = float("inf")
+    for rep in range(reps):
+        with tracer.span(label, rep=rep, iters=iters):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                carry = body(i, carry)
+                i += 1
+            jax.block_until_ready(carry)
+            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best, carry
+
+
 def loss_2nn(p, batch, rng):
     return softmax_xent(apply_2nn(p, batch["x"]), batch["y"])
 

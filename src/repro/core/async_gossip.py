@@ -223,6 +223,7 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                           param_specs: Pytree | None = None,
                           fused_update=None,
                           with_metrics: bool = True,
+                          with_telemetry: bool = False,
                           batch_fn: Callable | None = None) -> Callable:
     """Build event_step(state: AsyncRoundState, batches) -> (state',
     metrics) — ONE event of the asynchronous engine (the unit
@@ -240,6 +241,15 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     ``spec`` may be a static :class:`MixingSpec` or any non-stateful
     :class:`TopologySchedule` (the event index drives the schedule, and
     the schedule's active mask composes with the clock's ready mask).
+
+    ``with_telemetry``: additionally emit ``metrics["telemetry"]`` (a
+    :class:`repro.telemetry.Telemetry` pytree): the event's staleness
+    HISTOGRAM (per-client version lag, overflow bucket past the hard
+    cutoff), the base-support edges the cutoff zeroed (``dropped_edges``
+    — ``live_edges + dropped_edges`` conserves the base ready live
+    count), realized wire bits, and the quantizer's observed error vs the
+    Assumption-4 bound over the event's ready lanes. Default OFF; the
+    off path is bit-identical to a build without the flag.
 
     ``batch_fn``: optional in-graph data pipeline
     ``(client_ids [m], versions [m]) -> batches`` keyed on each client's
@@ -264,6 +274,12 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                           client_axes=client_axes, param_specs=param_specs,
                           plan=plan, wire=mcfg.wire, gate=True)
     W_static = None if scheduled else jnp.asarray(spec.W, jnp.float32)
+    if with_telemetry:
+        from ..telemetry.metrics import (Telemetry, client_dim,
+                                         dropped_edge_count,
+                                         quant_round_telemetry,
+                                         staleness_histogram,
+                                         wire_bits_for)
 
     def event_step(state: AsyncRoundState, batches: Pytree = None):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
@@ -329,11 +345,47 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             "live_edges": jnp.sum(
                 (W_eff * (1.0 - jnp.eye(m, dtype=jnp.float32))) != 0.0),
         }
+        if with_metrics or with_telemetry:
+            cdist = consensus_distance(x_next)
         if with_metrics:
             lag = version_next.max() - version_next
             metrics["mean_staleness"] = jnp.mean(lag.astype(jnp.float32))
             metrics["max_staleness"] = lag.max()
-            metrics["consensus_dist"] = consensus_distance(x_next)
+            metrics["consensus_dist"] = cdist
+        if with_telemetry:
+            with jax.named_scope("round/telemetry"):
+                d = client_dim(state.params)
+                fields = dict(
+                    consensus_dist=cdist,
+                    local_drift=consensus_distance(z),
+                    live_edges=metrics["live_edges"],
+                    wire_bits=wire_bits_for(d, cfg.quant,
+                                            metrics["live_edges"]),
+                    staleness_hist=staleness_histogram(
+                        version_next, async_cfg.max_staleness),
+                    dropped_edges=dropped_edge_count(
+                        W_t, version_next, ready_eff,
+                        async_cfg.max_staleness))
+                if cfg.quant is not None and cfg.quant.enabled:
+                    # The codec saw z gated to x on non-ready lanes;
+                    # average the observed error over the READY lanes so
+                    # busy clients' zero deltas don't dilute it.
+                    z_eff = jax.tree.map(
+                        lambda zl, xl: jnp.where(
+                            ready_eff.reshape(
+                                (-1,) + (1,) * (zl.ndim - 1)) > 0,
+                            zl, xl), z, state.params)
+                    # No lane sampling here: an event's readiness is
+                    # sparse (often one firing client), so a strided
+                    # sample would usually miss every participating lane
+                    # and report zeros. ready_eff already restricts the
+                    # mean to the lanes that actually published.
+                    qe, qb, qs = quant_round_telemetry(
+                        state.params, z_eff, cfg.quant, key_q,
+                        lane_weight=ready_eff)
+                    fields.update(quant_err_sq=qe, quant_bound=qb,
+                                  quant_sat_frac=qs)
+                metrics["telemetry"] = Telemetry(**fields)
         new_state = AsyncRoundState(
             params=x_next, rng=key_next, round=state.round + 1,
             clock=t_now, next_ready=next_ready, version=version_next,
@@ -350,6 +402,7 @@ def make_async_engine(loss_fn: LossFn, cfg: DFedAvgMConfig,
                       param_specs: Pytree | None = None,
                       fused_update=None,
                       with_metrics: bool = True,
+                      with_telemetry: bool = False,
                       batch_fn: Callable | None = None) -> Callable:
     """The whole event queue in one graph: run(state, batches) scans
     :func:`make_async_round_step` over a leading EVENT axis (``batches``
@@ -366,6 +419,7 @@ def make_async_engine(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                  param_specs=param_specs,
                                  fused_update=fused_update,
                                  with_metrics=with_metrics,
+                                 with_telemetry=with_telemetry,
                                  batch_fn=batch_fn)
 
     def run(state: AsyncRoundState, batches: Pytree = None,

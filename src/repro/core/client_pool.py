@@ -183,6 +183,24 @@ class ClientPool:
     def n_params(self) -> int:
         return int(sum(t.size for t in self._template))
 
+    def consensus_distance(self) -> float:
+        """(1/m) sum_i ||x(i) - xbar||^2 over the FULL logical population
+        — the resident ``core.mixing.consensus_distance`` metric at pool
+        scale, computed host-side in O(materialized * d): the m - n
+        virgin clients all sit at the shared template, so they contribute
+        one closed-form term instead of m - n row reads. f64 accumulation
+        (the resident f32 reduction is allclose, not bitwise)."""
+        n = self._n_slots
+        total = 0.0
+        for t, slab in zip(self._template, self._slabs):
+            rows = slab[:n].reshape(n, -1).astype(np.float64)
+            tmpl = t.reshape(-1).astype(np.float64)
+            mean = (rows.sum(axis=0) + (self.m - n) * tmpl) / self.m
+            sq = float(((rows - mean) ** 2).sum())
+            sq += (self.m - n) * float(((tmpl - mean) ** 2).sum())
+            total += sq / self.m
+        return total
+
     # -- fetch / write-back ------------------------------------------------
 
     def fetch(self, idx) -> Pytree:
@@ -548,7 +566,9 @@ def _mix_cohort_sparse(x_sub, z_sub, W_sub, idx, src_full, live, quant,
 def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                            psched: PoolSchedule, template: Pytree,
                            backend: str = "dense",
-                           fused_update=None) -> PooledRoundStep:
+                           fused_update=None,
+                           with_telemetry: bool = False
+                           ) -> PooledRoundStep:
     """Build the pooled round step for ``psched``'s cohorts.
 
     ``template`` is one client's parameter pytree (fixes the leaf count
@@ -561,6 +581,14 @@ def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     Bit-parity contract: see the module docstring (exact for degree <= 2
     bases; quantized wire words exact for any supported base because
     encode is elementwise per lane under full-width gathered keys).
+
+    ``with_telemetry`` adds ``metrics["telemetry"]`` (a
+    :class:`repro.telemetry.Telemetry`): realized cohort live edges /
+    wire bits and the quantizer's observed error vs the Assumption-4
+    bound, replayed under the SAME full-width gathered keys the cohort
+    mixer consumes. Full-population fields (consensus distance, pool
+    hit/miss) need host state and are the runner's job
+    (:meth:`PooledRunner.round` with ``telemetry=True``).
     """
     if backend not in ("dense", "sparse"):
         raise ValueError(f"unknown pooled backend {backend!r}")
@@ -575,6 +603,13 @@ def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         live = [s for s in range(src_np.shape[0])
                 if (src_np[s] != ar).any()]
         src_full = jnp.asarray(src_np)
+    if with_telemetry:
+        from ..telemetry.metrics import (QUANT_SAMPLE_LANES, Telemetry,
+                                         live_edge_count,
+                                         quant_round_telemetry,
+                                         wire_bits_for)
+        d_client = int(sum(np.prod(l.shape)
+                           for l in jax.tree.leaves(template)))
 
     def inputs(rng, t):
         key_round, key_mix, key_next = jax.random.split(rng, 3)
@@ -612,6 +647,24 @@ def make_pooled_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             "loss": jnp.sum(losses * valid) / jnp.maximum(valid.sum(), 1.0),
             "active_frac": jnp.float32(k) / jnp.float32(m),
         }
+        if with_telemetry:
+            with jax.named_scope("round/telemetry"):
+                live_e = live_edge_count(W_sub)
+                fields = dict(live_edges=live_e,
+                              wire_bits=wire_bits_for(d_client, quant,
+                                                      live_e),
+                              cohort_size=jnp.float32(k))
+                if quant is not None and quant.enabled:
+                    # Every cohort lane participates, so z needs no gate;
+                    # the gathered leaf_keys_sub replay the exact draws
+                    # the cohort mixer consumed.
+                    qe, qb, qs = quant_round_telemetry(
+                        x_sub, z_sub, quant, key_q,
+                        leaf_keys=leaf_keys_sub,
+                        sample_lanes=QUANT_SAMPLE_LANES)
+                    fields.update(quant_err_sq=qe, quant_bound=qb,
+                                  quant_sat_frac=qs)
+                metrics["telemetry"] = Telemetry(**fields)
         return x_next, metrics
 
     # Donate the cohort's staged parameters: the runner never reads
@@ -650,13 +703,19 @@ class PooledRunner:
                  loss_fn: LossFn, cfg: DFedAvgMConfig,
                  batch_fn: Callable, *, key,
                  backend: str = "dense", fused_update=None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, telemetry: bool = False,
+                 tracer=None):
         if pool.m != psched.m:
             raise ValueError(f"pool has m={pool.m}, schedule {psched.m}")
         self.pool, self.psched, self.cfg = pool, psched, cfg
+        self.telemetry = bool(telemetry)
+        if tracer is None:
+            from ..telemetry.tracer import NULL_TRACER as tracer
+        self.tracer = tracer
         self._rs = make_pooled_round_step(loss_fn, cfg, psched,
                                           pool.template, backend=backend,
-                                          fused_update=fused_update)
+                                          fused_update=fused_update,
+                                          with_telemetry=telemetry)
         self.rng = jnp.asarray(key)
         self.t = 0
         self.batch_fn = batch_fn
@@ -667,42 +726,80 @@ class PooledRunner:
         self.comm_bits = 0.0
 
     def _prepare(self, rng, t: int):
-        inp = self._rs.inputs(rng, jnp.asarray(t, jnp.int32))
-        idx_np = np.asarray(inp["idx"])
-        return {"inp": inp, "idx": idx_np,
-                "x": jax.device_put(self.pool.fetch(idx_np)),
-                "batches": self.batch_fn(idx_np, t)}
+        # Spans record the REAL thread: prefetched rounds show this span
+        # on the worker track, overlapping the caller's pool/step.
+        with self.tracer.span("pool/prepare", t=t):
+            inp = self._rs.inputs(rng, jnp.asarray(t, jnp.int32))
+            idx_np = np.asarray(inp["idx"])
+            return {"inp": inp, "idx": idx_np,
+                    "x": jax.device_put(self.pool.fetch(idx_np)),
+                    "batches": self.batch_fn(idx_np, t)}
 
     def round(self):
-        """Run one pooled round; returns the round's metrics dict."""
+        """Run one pooled round; returns the round's metrics dict.
+
+        With ``telemetry=True`` the dict additionally carries the
+        in-graph :class:`~repro.telemetry.Telemetry` fields flattened to
+        host floats plus the host-side pool counters: full-population
+        ``consensus_dist`` (the satellite the resident path always had),
+        ``pool_hit``/``pool_miss`` (cohort rows already materialized vs
+        read from the template), ``pool_materialized``/``pool_mbytes``.
+        """
         cur = self._pending if self._pending is not None \
             else self._prepare(self.rng, self.t)
         self._pending = None
         inp = cur["inp"]
+        if self.telemetry:
+            pool_hit = int((self.pool._slot[cur["idx"]] >= 0).sum())
         fut = (self._exec.submit(self._prepare, inp["key_next"], self.t + 1)
                if self._exec is not None else None)
-        x_next, metrics = self._rs.step(
-            cur["x"], cur["batches"], inp["client_keys"], inp["W_sub"],
-            inp["idx"], inp["key_q"], inp.get("leaf_keys"))
-        nxt = fut.result() if fut is not None else None
-        self.pool.writeback(
-            cur["idx"], jax.tree.map(np.asarray, jax.device_get(x_next)))
+        with self.tracer.span("pool/step", t=self.t):
+            x_next, metrics = self._rs.step(
+                cur["x"], cur["batches"], inp["client_keys"],
+                inp["W_sub"], inp["idx"], inp["key_q"],
+                inp.get("leaf_keys"))
+            if self.tracer.enabled:
+                # Only when tracing: make the span cover the device work
+                # the dispatch launched (otherwise keep the async
+                # dispatch overlap untouched).
+                jax.block_until_ready(x_next)
+        with self.tracer.span("pool/join"):
+            nxt = fut.result() if fut is not None else None
+        with self.tracer.span("pool/writeback"):
+            self.pool.writeback(
+                cur["idx"],
+                jax.tree.map(np.asarray, jax.device_get(x_next)))
         if nxt is not None:
             # Patch overlap rows at FIXED [k] shape (both cohorts are
             # ascending): rows of cur absent from nxt scatter to the
             # out-of-bounds sentinel and drop, so the op compiles once
             # regardless of how many clients the two cohorts share.
-            cur_j, nxt_j = jnp.asarray(cur["idx"]), jnp.asarray(nxt["idx"])
-            k_nxt = nxt_j.shape[0]
-            pos = jnp.clip(jnp.searchsorted(nxt_j, cur_j), 0, k_nxt - 1)
-            p = jnp.where(nxt_j[pos] == cur_j, pos, k_nxt)
-            nxt["x"] = jax.tree.map(
-                lambda b, xn: b.at[p].set(xn, mode="drop"),
-                nxt["x"], x_next)
+            with self.tracer.span("pool/patch"):
+                cur_j = jnp.asarray(cur["idx"])
+                nxt_j = jnp.asarray(nxt["idx"])
+                k_nxt = nxt_j.shape[0]
+                pos = jnp.clip(jnp.searchsorted(nxt_j, cur_j), 0,
+                               k_nxt - 1)
+                p = jnp.where(nxt_j[pos] == cur_j, pos, k_nxt)
+                nxt["x"] = jax.tree.map(
+                    lambda b, xn: b.at[p].set(xn, mode="drop"),
+                    nxt["x"], x_next)
             self._pending = nxt
         self.rng = inp["key_next"]
         self.t += 1
         self.comm_bits += self.bits_per_round
+        if self.telemetry:
+            from ..telemetry.metrics import telemetry_host
+            metrics = dict(metrics)
+            tel = metrics.pop("telemetry", None)
+            if tel is not None:
+                metrics.update(telemetry_host(tel))
+            metrics.update(
+                consensus_dist=self.pool.consensus_distance(),
+                pool_hit=pool_hit,
+                pool_miss=self.psched.cohort_size - pool_hit,
+                pool_materialized=self.pool.materialized,
+                pool_mbytes=self.pool.nbytes / 2**20)
         return metrics
 
     def run(self, n_rounds: int) -> list:
@@ -761,11 +858,16 @@ class PooledAsyncRunner:
                  batch_fn: Callable, *, key, capacity: int,
                  spec: MixingSpec | None = None,
                  ring_self_weight: float | None = None,
-                 fused_update=None):
+                 fused_update=None, telemetry: bool = False,
+                 tracer=None):
         if (spec is None) == (ring_self_weight is None):
             raise ValueError("pass exactly one of spec / ring_self_weight")
         self.pool, self.cfg, self.async_cfg = pool, cfg, async_cfg
         self.batch_fn = batch_fn
+        self.telemetry = bool(telemetry)
+        if tracer is None:
+            from ..telemetry.tracer import NULL_TRACER as tracer
+        self.tracer = tracer
         m = pool.m
         self.m = m
         self.capacity = int(capacity)
@@ -881,7 +983,8 @@ class PooledAsyncRunner:
         safe = np.minimum(idx, m - 1)
         valid = (idx < m).astype(np.float32)
 
-        x_sub = jax.device_put(self.pool.fetch(safe))
+        with self.tracer.span("pool/fetch", event=self.round):
+            x_sub = jax.device_put(self.pool.fetch(safe))
         v_sub = jnp.asarray(self.version[safe])
         ready_sub = jnp.asarray(ready_np[safe].astype(np.float32)
                                 * valid)
@@ -896,10 +999,13 @@ class PooledAsyncRunner:
                 self.cfg.eta, jnp.asarray(self.version),
                 self.async_cfg.eta_staleness_decay)[jnp.asarray(safe)]
 
-        x_next, dev_metrics = self._step(
-            x_sub, batches, ck_sub, jnp.asarray(idx), v_sub, ready_sub,
-            jnp.asarray(valid), ready.sum(), key_q, leaf_keys_sub,
-            etas_sub)
+        with self.tracer.span("pool/step", event=self.round):
+            x_next, dev_metrics = self._step(
+                x_sub, batches, ck_sub, jnp.asarray(idx), v_sub,
+                ready_sub, jnp.asarray(valid), ready.sum(), key_q,
+                leaf_keys_sub, etas_sub)
+            if self.tracer.enabled:
+                jax.block_until_ready(x_next)
 
         # advance the full-width clock state (resident chain, O(m) host)
         self.version = self.version + ready_np.astype(np.int32)
@@ -910,13 +1016,32 @@ class PooledAsyncRunner:
         self.clock = float(t_now)
 
         wmask = ready_np[safe] & (idx < m)
-        self.pool.writeback(idx, jax.tree.map(np.asarray, x_next),
-                            mask=wmask)
+        with self.tracer.span("pool/writeback"):
+            self.pool.writeback(idx, jax.tree.map(np.asarray, x_next),
+                                mask=wmask)
         self.rng = key_next
         self.round += 1
         metrics = dict(dev_metrics)
         metrics["clock"] = t_now
         metrics["ready_frac"] = float(ready_np.mean())
+        if self.telemetry:
+            # Host-side event telemetry (the clock/version state lives
+            # here, not in the device step).
+            S = self.async_cfg.max_staleness
+            lag = int(self.version.max()) - self.version
+            live = float(metrics["live_edges"])
+            metrics.update(
+                cohort_size=int(cohort.size),
+                wire_bits=float(message_bits(self.pool.n_params,
+                                             self.cfg.quant
+                                             or QuantConfig(bits=32))
+                                * live),
+                staleness_hist=[int(c) for c in np.bincount(
+                    np.clip(lag, 0, S + 1), minlength=S + 2)],
+                mean_staleness=float(lag.mean()),
+                max_staleness=int(lag.max()),
+                pool_materialized=self.pool.materialized,
+                pool_mbytes=self.pool.nbytes / 2**20)
         return metrics
 
     def run(self, n_events: int) -> list:

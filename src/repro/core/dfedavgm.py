@@ -105,6 +105,7 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                     param_specs: Pytree | None = None,
                     fused_update=None,
                     with_metrics: bool = True,
+                    with_telemetry: bool = False,
                     skip_inactive_compute: bool | str = "auto",
                     async_cfg=None) -> Callable:
     """Build round_step(state, batches) -> (state', metrics).
@@ -137,6 +138,15 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     hold x), so with skip off it instead includes the discarded updates
     of inactive lanes.
 
+    ``with_telemetry``: additionally emit ``metrics["telemetry"]`` — a
+    :class:`repro.telemetry.Telemetry` pytree of in-graph observability
+    counters (consensus distance, local drift, realized live edges and
+    wire bits, quantizer error vs the Assumption-4 bound). Default OFF,
+    and the off path builds the exact graph it always did (bit-identical;
+    pinned by ``tests/test_telemetry.py``). The telemetry re-derives the
+    round's mixing event from the same ``key_mix`` the mixer consumes, so
+    it observes the realized round, never a second draw.
+
     ``async_cfg``: an :class:`~repro.core.async_gossip.AsyncConfig` swaps
     the synchronous barrier for the event-driven asynchronous engine —
     the returned step consumes an ``AsyncRoundState`` (see
@@ -151,13 +161,14 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         return make_async_round_step(
             loss_fn, cfg, spec, async_cfg, mesh=mesh,
             client_axes=client_axes, param_specs=param_specs,
-            fused_update=fused_update, with_metrics=with_metrics)
+            fused_update=fused_update, with_metrics=with_metrics,
+            with_telemetry=with_telemetry)
 
     if cfg.fuse_round:
         return _make_fused_round_step(
             loss_fn, cfg, spec, mesh=mesh, client_axes=client_axes,
             param_specs=param_specs, fused_update=fused_update,
-            with_metrics=with_metrics,
+            with_metrics=with_metrics, with_telemetry=with_telemetry,
             skip_inactive_compute=skip_inactive_compute)
 
     scheduled = isinstance(spec, TopologySchedule)
@@ -189,6 +200,16 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
                            client_axes=client_axes, param_specs=param_specs)
 
+    if with_telemetry:
+        # Imported lazily at BUILD time: repro.core never depends on the
+        # telemetry package unless a caller opts in.
+        from ..telemetry.metrics import (QUANT_SAMPLE_LANES, Telemetry,
+                                         client_dim, live_edge_count,
+                                         quant_round_telemetry,
+                                         wire_bits_for)
+        static_edges = (None if scheduled
+                        else float(spec.graph.num_directed_edges()))
+
     def round_step(state: RoundState, batches: Pytree):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
         client_keys = jax.random.split(key_round, m)
@@ -211,7 +232,14 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             W_t, active, key_q, token_next = spec.token_event(key_mix,
                                                               state.token)
         elif skip:
-            _, active, _ = spec.round_event(key_mix, state.round)
+            # Telemetry keeps the round's W_t / key_q in hand — the SAME
+            # event from the same key, not a second draw.
+            if with_telemetry:
+                W_t, active, key_q = spec.round_event(key_mix, state.round)
+            else:
+                _, active, _ = spec.round_event(key_mix, state.round)
+        elif scheduled and with_telemetry:
+            W_t, _, key_q = spec.round_event(key_mix, state.round)
 
         if skip:
             # Padded upper-bound gather: unused slots fill with the
@@ -223,31 +251,33 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             idx = jnp.nonzero(active, size=k_active, fill_value=m)[0]
             safe = jnp.minimum(idx, m - 1)
             valid = (idx < m).astype(jnp.float32)
-            z_sub, losses = jax.vmap(train_one)(
-                jax.tree.map(lambda p: p[safe], state.params),
-                jax.tree.map(lambda b: b[safe], batches),
-                client_keys[safe])
+            with jax.named_scope("round/local_sgd"):
+                z_sub, losses = jax.vmap(train_one)(
+                    jax.tree.map(lambda p: p[safe], state.params),
+                    jax.tree.map(lambda b: b[safe], batches),
+                    client_keys[safe])
             # Inactive lanes never trained: their z IS their held x.
             z = jax.tree.map(
                 lambda xl, zl: xl.at[idx].set(zl, mode="drop"),
                 state.params, z_sub)
         else:
-            z, losses = jax.vmap(train_one)(state.params, batches,
-                                            client_keys)
+            with jax.named_scope("round/local_sgd"):
+                z, losses = jax.vmap(train_one)(state.params, batches,
+                                                client_keys)
 
         # The round counter is passed to EVERY mixer uniformly; static
         # impls ignore it, schedules use it to pick the mixing event.
         metrics = {}
-        if stateful:
-            x_next = event_mixer(state.params, z, W_t, active, key_q)
-            if with_metrics:
-                metrics["active_frac"] = jnp.mean(active)
-        elif scheduled:
-            x_next, active = mixer(state.params, z, key_mix, state.round)
-            if with_metrics:
-                metrics["active_frac"] = jnp.mean(active)
-        else:
-            x_next = mixer(state.params, z, key_mix, state.round)
+        with jax.named_scope("round/mix"):
+            if stateful:
+                x_next = event_mixer(state.params, z, W_t, active, key_q)
+            elif scheduled:
+                x_next, active = mixer(state.params, z, key_mix,
+                                       state.round)
+            else:
+                x_next = mixer(state.params, z, key_mix, state.round)
+        if with_metrics and scheduled:
+            metrics["active_frac"] = jnp.mean(active)
         # "loss" is the mean over clients that PARTICIPATED this round —
         # inactive clients' lanes are either skipped (gathered path) or
         # discarded, so averaging them in would mix in training that never
@@ -262,9 +292,46 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                / jnp.maximum(active.sum(), 1.0))
         else:
             metrics["loss"] = jnp.mean(losses)
+        if with_metrics or with_telemetry:
+            cdist = consensus_distance(x_next)
+            drift = consensus_distance(z)
         if with_metrics:
-            metrics["consensus_dist"] = consensus_distance(x_next)
-            metrics["local_drift"] = consensus_distance(z)
+            metrics["consensus_dist"] = cdist
+            metrics["local_drift"] = drift
+        if with_telemetry:
+            with jax.named_scope("round/telemetry"):
+                if scheduled:
+                    live = live_edge_count(W_t)
+                    key_q_t = key_q
+                else:
+                    live = jnp.float32(static_edges)
+                    key_q_t = key_mix
+                d = client_dim(state.params)
+                fields = dict(consensus_dist=cdist, local_drift=drift,
+                              live_edges=live,
+                              wire_bits=wire_bits_for(d, cfg.quant, live))
+                if cfg.quant is not None and cfg.quant.enabled:
+                    # The effective published z the codec saw: inactive
+                    # lanes gate to x (delta 0 -> Q(0), like the mixers).
+                    # err/bound average over PARTICIPATING lanes only —
+                    # a zero delta hits the quantizer's s=1 zero-amax
+                    # guard, which would pollute the Assumption-4 bound.
+                    z_eff, lane_w = z, None
+                    if scheduled and spec.gates_participation:
+                        lane_w = active
+                        if not skip:
+                            z_eff = jax.tree.map(
+                                lambda zl, xl: jnp.where(
+                                    active.reshape(
+                                        (-1,) + (1,) * (zl.ndim - 1)) > 0,
+                                    zl, xl), z, state.params)
+                    qe, qb, qs = quant_round_telemetry(
+                        state.params, z_eff, cfg.quant, key_q_t,
+                        lane_weight=lane_w,
+                        sample_lanes=QUANT_SAMPLE_LANES)
+                    fields.update(quant_err_sq=qe, quant_bound=qb,
+                                  quant_sat_frac=qs)
+                metrics["telemetry"] = Telemetry(**fields)
         new_state = RoundState(params=x_next, rng=key_next,
                                round=state.round + 1, token=token_next)
         return new_state, metrics
@@ -277,6 +344,7 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                            mesh=None, client_axes: Sequence[str] = (),
                            param_specs: Pytree | None = None,
                            fused_update=None, with_metrics: bool = True,
+                           with_telemetry: bool = False,
                            skip_inactive_compute: bool | str = "auto"
                            ) -> Callable:
     """The ``cfg.fuse_round`` realization of :func:`make_round_step`: K-2
@@ -316,6 +384,11 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
         mesh=mesh, client_axes=client_axes, param_specs=param_specs,
         plan=plan, wire=cfg.wire, gate=gate)
     ones = jnp.ones((m,), jnp.float32)
+    if with_telemetry:
+        from ..telemetry.metrics import (Telemetry, client_dim,
+                                         live_edge_count, wire_bits_for)
+        static_edges = (None if scheduled
+                        else float(spec.graph.num_directed_edges()))
 
     def round_step(state: RoundState, batches: Pytree):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
@@ -350,11 +423,26 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                / jnp.maximum(active.sum(), 1.0))
         else:
             metrics["loss"] = jnp.mean(losses)
+        if with_metrics and scheduled:
+            metrics["active_frac"] = jnp.mean(active)
+        if with_metrics or with_telemetry:
+            cdist = consensus_distance(x_next)
+            drift = consensus_distance(y_pub)
         if with_metrics:
-            if scheduled:
-                metrics["active_frac"] = jnp.mean(active)
-            metrics["consensus_dist"] = consensus_distance(x_next)
-            metrics["local_drift"] = consensus_distance(y_pub)
+            metrics["consensus_dist"] = cdist
+            metrics["local_drift"] = drift
+        if with_telemetry:
+            with jax.named_scope("round/telemetry"):
+                live = (live_edge_count(W_t) if scheduled
+                        else jnp.float32(static_edges))
+                d = client_dim(state.params)
+                # Quantizer fields stay None here: the fused tail's wire
+                # delta (y1 - x, formed INSIDE the encode kernels) never
+                # exists as a separate tensor to replay against.
+                metrics["telemetry"] = Telemetry(
+                    consensus_dist=cdist, local_drift=drift,
+                    live_edges=live,
+                    wire_bits=wire_bits_for(d, cfg.quant, live))
         new_state = RoundState(params=x_next, rng=key_next,
                                round=state.round + 1, token=state.token)
         return new_state, metrics

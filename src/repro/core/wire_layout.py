@@ -240,6 +240,7 @@ class WireLayout:
 
     # -- codec dispatch -----------------------------------------------------
 
+    @jax.named_scope("wire/encode")
     def encode(self, delta: jnp.ndarray, scales: jnp.ndarray, quant,
                leaf_keys=None, pallas: bool = False) -> jnp.ndarray:
         """Quantize + planar-pack the whole buffer in one pass.
@@ -278,6 +279,7 @@ class WireLayout:
         return kref.quantize_pack_buffer_ref(delta, sblk, quant.bits,
                                              noise=noise)
 
+    @jax.named_scope("wire/encode")
     def encode_momentum(self, y2d: jnp.ndarray, v2d: jnp.ndarray,
                         g2d: jnp.ndarray, x2d: jnp.ndarray,
                         scales: jnp.ndarray, et: jnp.ndarray, quant,
@@ -329,6 +331,7 @@ class WireLayout:
             eta[..., None, None] if eta.ndim else eta,
             theta[..., None, None] if theta.ndim else theta, noise=noise)
 
+    @jax.named_scope("wire/decode")
     def decode_apply_momentum(self, base: jnp.ndarray, streams: jnp.ndarray,
                               scales: jnp.ndarray, weights: jnp.ndarray,
                               v2d: jnp.ndarray, g2d: jnp.ndarray,
@@ -362,6 +365,7 @@ class WireLayout:
         return kref.dequant_mix_momentum_buffer_ref(
             base, streams, sblk, weights, v2d, g2d, et, quant.bits)
 
+    @jax.named_scope("wire/decode")
     def decode_apply(self, base: jnp.ndarray, streams: jnp.ndarray,
                      scales: jnp.ndarray, weights: jnp.ndarray, quant,
                      pallas: bool = False) -> jnp.ndarray:

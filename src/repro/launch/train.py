@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 import warnings
 
 import jax
@@ -26,6 +25,37 @@ from ..core import (AsyncConfig, CommLedger, DFedAvgMConfig, MixingSpec,
 from ..core.topology import erdos_renyi_graph, ring_graph, torus_graph
 from ..data.synthetic import lm_client_batches, lm_round_batches
 from ..models import model as M
+from ..telemetry import RunLog, Tracer, telemetry_host
+
+# RunLog round-record fields pulled straight out of the step's metrics
+# dict when present (the telemetry pytree, if any, is merged first and
+# wins — it is the realized, cross-checkable value).
+_METRIC_FIELDS = ("consensus_dist", "active_frac", "clock", "ready_frac",
+                  "mean_staleness", "max_staleness", "live_edges")
+
+
+def _round_fields(metrics, comm_bits=None):
+    """metrics dict (jit output or pooled-runner host dict) -> plain
+    python kwargs for ``RunLog.round``. One host transfer for the
+    telemetry pytree; scalar metrics are pulled individually only when
+    the record is actually being written."""
+    out = {}
+    tel = metrics.get("telemetry")
+    if tel is not None:
+        out.update(telemetry_host(tel))
+    for k in _METRIC_FIELDS:
+        if k in metrics and k not in out:
+            out[k] = float(metrics[k])
+    for k, v in metrics.items():
+        if k.startswith("pool_") or k == "cohort_size":
+            out[k] = float(v) if not isinstance(v, (list, int)) else v
+    if "staleness_hist" in metrics and "staleness_hist" not in out:
+        out["staleness_hist"] = [int(c) for c in metrics["staleness_hist"]]
+    if "wire_bits" in metrics and "wire_bits" not in out:
+        out["wire_bits"] = float(metrics["wire_bits"])
+    if comm_bits is not None:
+        out["comm_bits"] = float(comm_bits)
+    return out
 
 
 def build_topology(args, m: int):
@@ -61,13 +91,15 @@ def build_topology(args, m: int):
     raise SystemExit(f"unknown --schedule {args.schedule!r}")
 
 
-def run_pooled(args, cfg):
+def run_pooled(args, cfg, log, tracer):
     """Virtual-client-pool execution: all ``--clients`` live in a host-
     side :class:`~repro.core.client_pool.ClientPool`; only the round's
     cohort (``--resident-lanes`` wide) is materialized on device. Scales
     m to 10^5-10^6 on one host — the structural-ring schedule
     constructors never build the O(m^2) adjacency, and data is generated
-    per cohort, keyed on (client id, progress counter)."""
+    per cohort, keyed on (client id, progress counter). With
+    ``--telemetry`` the pooled path reports ``consensus_dist`` over the
+    FULL pool (host-side, f64 accumulation) like the resident path."""
     from ..core import (ClientPool, PoolSchedule, PooledAsyncRunner,
                         PooledRunner)
     from .mesh import resident_lane_capacity
@@ -102,9 +134,10 @@ def run_pooled(args, cfg):
                                                  **data_kw)
         runner = PooledAsyncRunner(pool, loss, dfed, acfg, bf,
                                    key=k_state, capacity=lanes,
-                                   ring_self_weight=args.self_weight)
-        print(f"pooled async: m={m} capacity={lanes} "
-              f"speed={args.speed_model} (rounds are EVENTS)")
+                                   ring_self_weight=args.self_weight,
+                                   telemetry=args.telemetry, tracer=tracer)
+        log.info(f"pooled async: m={m} capacity={lanes} "
+                 f"speed={args.speed_model} (rounds are EVENTS)")
     else:
         if args.schedule == "random-walk":
             psched = PoolSchedule.ring_random_walk(
@@ -120,12 +153,12 @@ def run_pooled(args, cfg):
         bf = lambda idx, t: lm_client_batches(
             k_data, idx, np.full(idx.shape, t, np.int32), **data_kw)
         runner = PooledRunner(pool, psched, loss, dfed, bf, key=k_state,
-                              backend=backend)
-        print(f"pooled: m={m} schedule={psched.name} "
-              f"cohort={psched.cohort_size} backend={backend} "
-              f"(E[edges/round]={psched.expected_directed_edges():.1f})")
+                              backend=backend, telemetry=args.telemetry,
+                              tracer=tracer)
+        log.info(f"pooled: m={m} schedule={psched.name} "
+                 f"cohort={psched.cohort_size} backend={backend} "
+                 f"(E[edges/round]={psched.expected_directed_edges():.1f})")
 
-    t0 = time.time()
     metrics = {}
     async_bits = 0.0
     for t in range(args.rounds):
@@ -136,15 +169,20 @@ def run_pooled(args, cfg):
                 d, quant, live_edges=float(metrics["live_edges"]))
         if args.ckpt_dir and not args.async_gossip \
                 and (t + 1) % args.ckpt_every == 0:
-            runner.save(args.ckpt_dir)
-        if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+            with tracer.span("round/checkpoint", t=t):
+                runner.save(args.ckpt_dir)
+        cadence = t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1
+        if log.jsonl is not None or cadence:
             bits = async_bits if args.async_gossip else runner.comm_bits
-            print(f"round {t:4d} loss={float(metrics['loss']):.4f} "
-                  f"pool={pool.materialized}/{m} rows "
-                  f"({pool.nbytes/2**20:.1f}MB host) "
-                  f"comm={bits/8/2**20:.1f}MB ({time.time()-t0:.1f}s)")
-    print(f"done; {pool.materialized} of {m} clients materialized, "
-          f"{pool.nbytes/2**20:.1f}MB host params")
+            fields = _round_fields(metrics, comm_bits=bits)
+            fields.setdefault("pool_materialized", int(pool.materialized))
+            fields.setdefault("pool_mbytes", pool.nbytes / 2**20)
+            log.round(t, float(metrics["loss"]), console=cadence, **fields)
+    log.info(f"done; {pool.materialized} of {m} clients materialized, "
+             f"{pool.nbytes/2**20:.1f}MB host params")
+    bits = async_bits if args.async_gossip else runner.comm_bits
+    log.end(args.rounds, comm_bits=float(bits),
+            final_loss=float(metrics["loss"]) if metrics else None)
     return runner, metrics
 
 
@@ -241,17 +279,42 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None,
                     help="save RoundState every --ckpt-every rounds")
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="build the round step with in-graph telemetry "
+                         "(consensus distance, realized wire bits, "
+                         "quantizer error vs the Assumption-4 bound, ...) "
+                         "— the off path is bit-identical to not passing "
+                         "this flag")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="write EVERY round as a schema-validated JSONL "
+                         "record (the console keeps its sparse cadence; "
+                         "see docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write host-stage spans as Chrome trace-event "
+                         "JSON, viewable in Perfetto (ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = make_reduced(cfg)
     cfg = dataclasses.replace(cfg, remat=False)
-    if args.pool:
-        # Branches BEFORE build_topology: pooled schedules on a ring base
-        # are constructed structurally, so no O(m^2) adjacency exists at
-        # m = 1e5-1e6.
-        return run_pooled(args, cfg)
+    log = RunLog(jsonl=args.log_jsonl)
+    tracer = Tracer(enabled=args.trace is not None)
+    log.start(config={k: v for k, v in vars(args).items()})
+    try:
+        if args.pool:
+            # Branches BEFORE build_topology: pooled schedules on a ring
+            # base are constructed structurally, so no O(m^2) adjacency
+            # exists at m = 1e5-1e6.
+            return run_pooled(args, cfg, log, tracer)
+        return _run_resident(args, cfg, log, tracer)
+    finally:
+        if args.trace:
+            tracer.save(args.trace)
+        log.close()
+
+
+def _run_resident(args, cfg, log, tracer):
     m = args.clients
 
     quant = QuantConfig(bits=args.bits) if args.bits < 32 else None
@@ -289,23 +352,24 @@ def main(argv=None):
         plans = spec.gossip_plans() if scheduled else [spec.gossip_plan()]
         plan = plans if len(plans) > 1 else plans[0]
     if scheduled:
-        print(f"topology schedule: {spec.name} "
-              f"(E[directed edges/round] = {spec.expected_directed_edges():.1f})")
+        log.info(f"topology schedule: {spec.name} "
+                 f"(E[directed edges/round] = "
+                 f"{spec.expected_directed_edges():.1f})")
     if plan is not None:
         for p in (plan if isinstance(plan, list) else [plan]):
             if args.clients_per_shard > 1:
                 bp = p.block_plan(m // args.clients_per_shard)
-                print(f"mixer backend: sparse ({p.name}: "
-                      f"{args.clients_per_shard} clients/shard over "
-                      f"{bp.n_shards} shards, {bp.num_collectives} "
-                      f"ppermutes, {bp.num_wire_lane_slots} boundary wire "
-                      f"lanes per round)")
+                log.info(f"mixer backend: sparse ({p.name}: "
+                         f"{args.clients_per_shard} clients/shard over "
+                         f"{bp.n_shards} shards, {bp.num_collectives} "
+                         f"ppermutes, {bp.num_wire_lane_slots} boundary "
+                         f"wire lanes per round)")
             else:
-                print(f"mixer backend: sparse ({p.name}: {p.n_steps} "
-                      f"ppermute steps, {p.num_directed_wire_edges} "
-                      f"realized wire edges per round)")
+                log.info(f"mixer backend: sparse ({p.name}: {p.n_steps} "
+                         f"ppermute steps, {p.num_directed_wire_edges} "
+                         f"realized wire edges per round)")
     else:
-        print("mixer backend: dense (einsum reference)")
+        log.info("mixer backend: dense (einsum reference)")
 
     key = jax.random.PRNGKey(args.seed)
     k_init, k_state, k_data = jax.random.split(key, 3)
@@ -321,10 +385,10 @@ def main(argv=None):
                  "straggler": SpeedModel.straggler()}[args.speed_model]
         acfg = AsyncConfig(speed=speed, max_staleness=args.max_staleness,
                            eta_staleness_decay=args.eta_staleness_decay)
-        print(f"async gossip: speed={args.speed_model} "
-              f"max_staleness={args.max_staleness} "
-              f"eta_staleness_decay={args.eta_staleness_decay} "
-              f"(rounds are EVENTS)")
+        log.info(f"async gossip: speed={args.speed_model} "
+                 f"max_staleness={args.max_staleness} "
+                 f"eta_staleness_decay={args.eta_staleness_decay} "
+                 f"(rounds are EVENTS)")
     # Donating the round state lets XLA reuse the params/momentum HBM in
     # place instead of round-tripping a fresh copy every round (a no-op
     # warning on CPU, a real saving on device).
@@ -332,7 +396,8 @@ def main(argv=None):
                             message="Some donated buffers were not usable")
     step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
                                    client_axes=client_axes or (),
-                                   async_cfg=acfg),
+                                   async_cfg=acfg,
+                                   with_telemetry=args.telemetry),
                    donate_argnums=(0,))
     if acfg is not None:
         state = init_async_state(stacked, k_state, acfg.speed)
@@ -347,21 +412,29 @@ def main(argv=None):
     # event below (the set varies with readiness and staleness).
     ledger = CommLedger(0.0 if acfg is not None
                         else round_comm_bits(spec, d, quant))
-    t0 = time.time()
     for t in range(args.rounds):
-        if acfg is not None:
-            # Async events are unordered across clients, so data must key
-            # on each client's OWN progress counter — a global round
-            # index would feed a client different batches whenever the
-            # fleet's interleaving changed (see data.lm_client_batches).
-            batches = lm_client_batches(
-                k_data, jnp.arange(m), state.version, K=args.local_steps,
-                batch=args.batch, seq=args.seq, vocab=cfg.vocab_size)
-        else:
-            batches = lm_round_batches(k_data, t, m=m, K=args.local_steps,
-                                       batch=args.batch, seq=args.seq,
-                                       vocab=cfg.vocab_size)
-        state, metrics = step(state, batches)
+        with tracer.span("round/data", t=t):
+            if acfg is not None:
+                # Async events are unordered across clients, so data must
+                # key on each client's OWN progress counter — a global
+                # round index would feed a client different batches
+                # whenever the fleet's interleaving changed (see
+                # data.lm_client_batches).
+                batches = lm_client_batches(
+                    k_data, jnp.arange(m), state.version,
+                    K=args.local_steps, batch=args.batch, seq=args.seq,
+                    vocab=cfg.vocab_size)
+            else:
+                batches = lm_round_batches(k_data, t, m=m,
+                                           K=args.local_steps,
+                                           batch=args.batch, seq=args.seq,
+                                           vocab=cfg.vocab_size)
+        with tracer.span("round/step", t=t):
+            state, metrics = step(state, batches)
+            if tracer.enabled:
+                # Fold device time into the span; untraced runs keep the
+                # async-dispatch overlap untouched.
+                jax.block_until_ready(metrics["loss"])
         if acfg is not None:
             ledger.add_bits(async_event_bits(
                 d, quant, live_edges=float(metrics["live_edges"])))
@@ -369,17 +442,23 @@ def main(argv=None):
             ledger.tick()
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
             from ..checkpoint import save_checkpoint
-            save_checkpoint(args.ckpt_dir, t + 1, state)
-        if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
-            extra = (f"clock={float(state.clock):.2f} "
-                     f"ready={float(metrics['ready_frac']):.2f} "
-                     if acfg is not None else "")
-            print(f"round {t:4d} loss={float(metrics['loss']):.4f} "
-                  f"consensus={float(metrics['consensus_dist']):.3e} "
-                  f"{extra}comm={ledger.total_megabytes:.1f}MB "
-                  f"({time.time()-t0:.1f}s)")
+            with tracer.span("round/checkpoint", t=t):
+                save_checkpoint(args.ckpt_dir, t + 1, state)
+        cadence = t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1
+        if log.jsonl is not None or cadence:
+            with tracer.span("round/d2h", t=t):
+                fields = _round_fields(metrics,
+                                       comm_bits=ledger.total_bits)
+                if acfg is not None:
+                    fields.setdefault("clock", float(state.clock))
+                log.round(t, float(metrics["loss"]), console=cadence,
+                          **fields)
     avg = average_params(state.params)
-    print("done; consensus model leaves:", len(jax.tree.leaves(avg)))
+    log.info(f"done; consensus model leaves: {len(jax.tree.leaves(avg))}")
+    log.end(args.rounds, comm_bits=float(ledger.total_bits),
+            final_loss=float(metrics["loss"]),
+            final_consensus_dist=(float(metrics["consensus_dist"])
+                                  if "consensus_dist" in metrics else None))
     return state, metrics
 
 

@@ -1,0 +1,35 @@
+"""Observability subsystem: in-graph round metrics, host span tracing,
+and the structured run log.
+
+Three independent layers, composable per run:
+
+  * :mod:`repro.telemetry.metrics` — the :class:`Telemetry` pytree the
+    round steps emit under ``with_telemetry=True`` (consensus distance,
+    local drift, realized wire bits, quantizer error vs the Assumption-4
+    bound, staleness histogram, ...). Jit-compatible; the off path is
+    bit-identical to a build without the flag.
+  * :mod:`repro.telemetry.tracer` — wall-clock spans over the host
+    stages, exported as Chrome trace-event JSON (Perfetto).
+  * :mod:`repro.telemetry.schema` / :mod:`repro.telemetry.sink` — the
+    JSONL run-log schema and the :class:`RunLog` fan-out (file + console
+    renderer) the launch drivers emit through.
+
+See ``docs/OBSERVABILITY.md`` for definitions and workflows.
+"""
+from .metrics import (QUANT_SAMPLE_LANES, Telemetry, client_dim,
+                      dropped_edge_count, live_edge_count,
+                      quant_round_telemetry, staleness_histogram,
+                      telemetry_host, wire_bits_for)
+from .schema import SCHEMA_VERSION, validate_record
+from .sink import ConsoleRenderer, JsonlSink, RunLog
+from .tracer import NULL_TRACER, Tracer
+
+__all__ = [
+    "QUANT_SAMPLE_LANES", "Telemetry", "client_dim", "dropped_edge_count",
+    "live_edge_count",
+    "quant_round_telemetry", "staleness_histogram", "telemetry_host",
+    "wire_bits_for",
+    "SCHEMA_VERSION", "validate_record",
+    "ConsoleRenderer", "JsonlSink", "RunLog",
+    "NULL_TRACER", "Tracer",
+]
