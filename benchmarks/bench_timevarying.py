@@ -431,6 +431,78 @@ def block_gossip_compare(smoke: bool = False) -> dict:
     return res
 
 
+def placement_compare(smoke: bool = False) -> dict:
+    """Compile-time placement pass on irregular graphs: m=64 clients
+    over 8 shards (clients_per_shard=8), boundary wire lane slots and
+    realized q8 wire bytes of the block realization under the default
+    CONTIGUOUS lane layout vs the graph-PARTITIONED placement
+    (``compute_placement``: greedy block growth + Kernighan-Lin
+    boundary refinement, pure numpy at plan-compile time — no mesh, no
+    training, so smoke and full runs are identical). The edge-sampled
+    Erdős–Rényi arm is the CI-gated one: its support scatters across a
+    contiguous split, and the partition must ship at most HALF its
+    boundary lane slots. The small-world arm (ring + random chords) is
+    reported unguarded — a ring is already contiguous-optimal, so the
+    chords' cut is largely irreducible and the expected ratio is ~1 (the
+    pass never does worse: the contiguous candidate is always in the
+    pool). Lands under the ``placement`` key of BENCH_gossip.json."""
+    del smoke  # compile-time numpy only — same cost either way
+    import numpy as np
+
+    from repro.core import compute_placement
+    from repro.core.comm_cost import plan_round_bits
+    from repro.core.gossip_plan import plan_from_support
+    from repro.core.topology import Graph
+
+    m, shards, d = 64, 8, 16384
+    cps = m // shards
+    q8 = QuantConfig(bits=8)
+
+    def ring_with_chords(n_chords: int, seed: int) -> Graph:
+        adj = np.asarray(ring_graph(m).adj).copy()
+        rng = np.random.default_rng(seed)
+        added = 0
+        while added < n_chords:
+            i, j = (int(v) for v in rng.integers(0, m, size=2))
+            if i != j and not adj[i, j]:
+                adj[i, j] = adj[j, i] = True
+                added += 1
+        return Graph(adj, name=f"ring{m}+{n_chords}chords")
+
+    arms = {
+        "er": erdos_renyi_graph(m, 0.06, seed=2),
+        "ring_chords": ring_with_chords(16, seed=7),
+    }
+    out = {"m": m, "n_shards": shards, "d": d, "bits": 8}
+    for name, g in arms.items():
+        plan = plan_from_support(g, name=g.name)
+        pl = compute_placement(g, shards)
+        cont = plan.block_plan(shards).num_wire_lane_slots
+        part = plan.block_plan(shards, placement=pl).num_wire_lane_slots
+        out[name] = {
+            "graph": g.name,
+            "directed_edges": g.num_directed_edges(),
+            "contiguous_boundary_lane_slots": cont,
+            "partition_boundary_lane_slots": part,
+            "boundary_ratio_contiguous_over_partition":
+                cont / max(part, 1),
+            "contiguous_wire_bytes_q8": plan_round_bits(
+                plan, d, q8, clients_per_shard=cps) / 8.0,
+            "partition_wire_bytes_q8": plan_round_bits(
+                plan, d, q8, clients_per_shard=cps, placement=pl) / 8.0,
+            "contiguous_boundary_edges": g.block_boundary_edges(cps),
+            "partition_boundary_edges": g.block_boundary_edges(cps,
+                                                               perm=pl),
+        }
+    # The tentpole gate, asserted at the source (ci.yml re-checks it on
+    # the uploaded artifact): >= 2x fewer boundary lane slots on the ER
+    # arm.
+    er = out["er"]
+    assert (er["partition_boundary_lane_slots"]
+            <= er["contiguous_boundary_lane_slots"] / 2), er
+    return out
+
+
 def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     """dense vs sparse on an edge-sampled schedule: HLO wire bytes (the
     O(m) all-gather vs O(degree) ppermute claim), wall clock, and the
@@ -453,6 +525,9 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     res["fused"] = fused_round_compare(smoke=smoke)
     # Telemetry-overhead arm: with_telemetry on vs off, gated <= 1.10x.
     res["telemetry"] = telemetry_overhead_compare(smoke=smoke)
+    # Placement arm: contiguous vs partitioned lane layout on irregular
+    # graphs (compile-time numpy; ER ratio gated >= 2x).
+    res["placement"] = placement_compare(smoke=smoke)
     GOSSIP_JSON.write_text(json.dumps(res, indent=2))
     rows = []
     for bits in (32, 8):
@@ -492,6 +567,17 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
         tl["us_on"],
         f"off_us={tl['us_off']:.1f}|"
         f"overhead_ratio={tl['overhead_ratio']:.3f}"))
+    for arm in ("er", "ring_chords"):
+        pa = res["placement"][arm]
+        rows.append((
+            f"placement_{arm}_partition_vs_contiguous",
+            0.0,
+            f"graph={pa['graph']}|"
+            f"contig_lanes={pa['contiguous_boundary_lane_slots']}|"
+            f"part_lanes={pa['partition_boundary_lane_slots']}|"
+            f"ratio={pa['boundary_ratio_contiguous_over_partition']:.2f}|"
+            f"contig_q8B={pa['contiguous_wire_bytes_q8']:.0f}|"
+            f"part_q8B={pa['partition_wire_bytes_q8']:.0f}"))
     return rows
 
 

@@ -10,7 +10,8 @@ from .quantize import (QuantConfig, quantize, quantize_int, dequantize_int,  # n
                        dequantize_pytree, message_bits)
 from .local_sgd import local_train, heavy_ball_update  # noqa
 from .wire_layout import WireLayout  # noqa
-from .gossip_plan import (GossipPlan, BlockPlan, compile_block_plan,  # noqa
+from .gossip_plan import (GossipPlan, BlockPlan, Placement,  # noqa
+                          compile_block_plan, compute_placement,
                           plan_from_spec, plan_from_support,
                           plan_from_matrix)
 from .mixing import (MixerConfig, make_mixer, make_scheduled_mixer,  # noqa

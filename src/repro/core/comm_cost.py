@@ -46,7 +46,8 @@ def schedule_round_bits(schedule: TopologySchedule, d: int,
 def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
                     count_lemma5_replicas: bool = False,
                     t: int | None = None,
-                    clients_per_shard: int = 1) -> float:
+                    clients_per_shard: int = 1,
+                    placement=None) -> float:
     """REALIZED wire diagnostic for the sparse backend: one round of a
     compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
     ``message_bits`` across every directed *plan* edge — a static
@@ -75,14 +76,18 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
     instead — only the plan's boundary lane slots touch the wire
     (padded slots included; intra-block edges are on-device gathers and
     cost nothing). For a contiguous-blocked ring this is O(n_shards *
-    boundary_degree) instead of O(m).
+    boundary_degree) instead of O(m). ``placement`` bills the PLACED
+    block realization (``gossip_plan.Placement`` lane relabeling)
+    instead of the contiguous default — the wire ``--placement
+    partition`` actually schedules.
     """
     if isinstance(plan, (list, tuple)):
         plans = list(plan)
         if t is not None:
             plans = [plans[int(t) % len(plans)]]
         return sum(plan_round_bits(p, d, quant, count_lemma5_replicas,
-                                   clients_per_shard=clients_per_shard)
+                                   clients_per_shard=clients_per_shard,
+                                   placement=placement)
                    for p in plans) / len(plans)
     qc = quant if quant is not None else QuantConfig(bits=32)
     per_edge = message_bits(d, qc)
@@ -92,7 +97,8 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
         if plan.m % clients_per_shard:
             raise ValueError(f"clients_per_shard={clients_per_shard} "
                              f"must divide m={plan.m}")
-        bp = plan.block_plan(plan.m // clients_per_shard)
+        bp = plan.block_plan(plan.m // clients_per_shard,
+                             placement=placement)
         return per_edge * bp.num_wire_lane_slots
     return per_edge * plan.num_directed_wire_edges
 

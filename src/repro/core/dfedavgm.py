@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from .local_sgd import local_train, local_train_deferred
-from .mixing import (MixerConfig, consensus_distance, make_event_mixer,
-                     make_fused_tail, make_mixer)
+from .mixing import (MixerConfig, _clients_per_shard, _quant_leaf_keys,
+                     consensus_distance, make_event_mixer, make_fused_tail,
+                     make_mixer)
 from .quantize import QuantConfig, message_bits
 from .topology import MixingSpec, TopologySchedule
 
@@ -92,6 +93,16 @@ def init_round_state(params_stacked: Pytree, key: jax.Array,
                       round=jnp.zeros((), jnp.int32), token=token)
 
 
+def _placed_boundary_lane_slots(plan, mesh, client_axes) -> float | None:
+    """Wire lane slots of ``plan``'s block realization on this mesh — the
+    telemetry ``placement_boundary_lanes`` constant (None when the mesh
+    gives no client sharding to realize blocks on)."""
+    m_local = _clients_per_shard(mesh, tuple(client_axes), plan.m)
+    if m_local is None:
+        return None
+    return float(plan.block_plan(plan.m // m_local).num_wire_lane_slots)
+
+
 def average_params(stacked: Pytree) -> Pytree:
     """Consensus/average model xbar = (1/m) sum_i x(i) (what Thm 1 tracks,
     and the model we serve)."""
@@ -107,7 +118,7 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                     with_metrics: bool = True,
                     with_telemetry: bool = False,
                     skip_inactive_compute: bool | str = "auto",
-                    async_cfg=None) -> Callable:
+                    async_cfg=None, placement=None) -> Callable:
     """Build round_step(state, batches) -> (state', metrics).
 
     ``batches``: pytree with leaves [m, K, ...] — K minibatches per client
@@ -155,7 +166,20 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     Stateful schedules (``random_walk(stateful=True)``) thread their token
     position through ``RoundState.token``: seed it with
     ``init_round_state(..., token=spec.init_token())``.
+
+    ``placement``: a :class:`~repro.core.gossip_plan.Placement` (from
+    ``compute_placement``) runs the sparse backend with lanes relabeled
+    so shard boundaries follow the partition cut. Client state then
+    lives in LANE order: initial params, every round's batches, the
+    per-client round keys, and the schedule's active mask are gathered
+    through ``placement.perm`` (lane ``p`` carries client ``perm[p]``),
+    while PRNG derivation stays in client order — so placed training is
+    bitwise identical to unplaced, with per-lane outputs permuted.
+    Sparse impls only; incompatible with the async engine.
     """
+    if placement is not None and async_cfg is not None:
+        raise ValueError("placement is not supported with the async "
+                         "engine (its lane bookkeeping is client-order)")
     if async_cfg is not None:
         from .async_gossip import make_async_round_step
         return make_async_round_step(
@@ -169,7 +193,8 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             loss_fn, cfg, spec, mesh=mesh, client_axes=client_axes,
             param_specs=param_specs, fused_update=fused_update,
             with_metrics=with_metrics, with_telemetry=with_telemetry,
-            skip_inactive_compute=skip_inactive_compute)
+            skip_inactive_compute=skip_inactive_compute,
+            placement=placement)
 
     scheduled = isinstance(spec, TopologySchedule)
     stateful = scheduled and spec.is_stateful
@@ -189,16 +214,23 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                 f"{getattr(spec, 'name', spec)!r}")
         skip = skip and k_active < m
 
+    perm = None if placement is None else jnp.asarray(placement.perm)
     if stateful:
         mcfg = cfg.mixer_config()
         impl = mcfg.resolved_impl(spec, mesh, client_axes)
         plan = spec.gossip_plan() if impl == "sparse" else None
+        if placement is not None:
+            if plan is None:
+                raise ValueError("placement requires the sparse backend, "
+                                 f"got impl={impl!r}")
+            plan = plan.placed(placement)
         event_mixer = make_event_mixer(
             m, quant=mcfg.quant, mesh=mesh, client_axes=client_axes,
             param_specs=param_specs, plan=plan, wire=mcfg.wire, gate=True)
     else:
         mixer = make_mixer(spec, cfg.mixer_config(), mesh=mesh,
-                           client_axes=client_axes, param_specs=param_specs)
+                           client_axes=client_axes, param_specs=param_specs,
+                           placement=placement)
 
     if with_telemetry:
         # Imported lazily at BUILD time: repro.core never depends on the
@@ -209,10 +241,28 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                          wire_bits_for)
         static_edges = (None if scheduled
                         else float(spec.graph.num_directed_edges()))
+        # Boundary lane slots of this run's (possibly placed) block
+        # realization — a compile-time constant surfaced per round so
+        # placed runs are auditable next to the realized wire bill.
+        placement_lanes = None
+        impl_t = cfg.mixer_config().resolved_impl(spec, mesh, client_axes)
+        if impl_t in ("ring", "torus", "sparse") and not (
+                scheduled and spec.kind == "cycle"):
+            plan_t = spec.gossip_plan()
+            if placement is not None:
+                plan_t = plan_t.placed(placement)
+            placement_lanes = _placed_boundary_lane_slots(plan_t, mesh,
+                                                          client_axes)
 
     def round_step(state: RoundState, batches: Pytree):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
         client_keys = jax.random.split(key_round, m)
+        if perm is not None:
+            # Lane order: lane p trains client perm[p] — its batches and
+            # its round key. Keys derive in CLIENT order first (single
+            # source of truth), so placed == unplaced bitwise per client.
+            batches = jax.tree.map(lambda b: b[perm], batches)
+            client_keys = client_keys[perm]
 
         train_one = lambda p, b, k: local_train(
             loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
@@ -240,6 +290,9 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                 _, active, _ = spec.round_event(key_mix, state.round)
         elif scheduled and with_telemetry:
             W_t, _, key_q = spec.round_event(key_mix, state.round)
+        if perm is not None and active is not None:
+            # Schedule events are CLIENT-order; state is lane-order.
+            active = active[perm]
 
         if skip:
             # Padded upper-bound gather: unused slots fill with the
@@ -310,6 +363,9 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                 fields = dict(consensus_dist=cdist, local_drift=drift,
                               live_edges=live,
                               wire_bits=wire_bits_for(d, cfg.quant, live))
+                if placement_lanes is not None:
+                    fields["placement_boundary_lanes"] = jnp.float32(
+                        placement_lanes)
                 if cfg.quant is not None and cfg.quant.enabled:
                     # The effective published z the codec saw: inactive
                     # lanes gate to x (delta 0 -> Q(0), like the mixers).
@@ -325,8 +381,16 @@ def make_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                     active.reshape(
                                         (-1,) + (1,) * (zl.ndim - 1)) > 0,
                                     zl, xl), z, state.params)
+                    leaf_keys_t = None
+                    if perm is not None and cfg.quant.stochastic:
+                        # Replay in lane order: lane p uses client
+                        # perm[p]'s keys, exactly like the wire.
+                        leaf_keys_t = _quant_leaf_keys(
+                            key_q_t, len(jax.tree.leaves(state.params)),
+                            m)[:, perm]
                     qe, qb, qs = quant_round_telemetry(
                         state.params, z_eff, cfg.quant, key_q_t,
+                        leaf_keys=leaf_keys_t,
                         lane_weight=lane_w,
                         sample_lanes=QUANT_SAMPLE_LANES)
                     fields.update(quant_err_sq=qe, quant_bound=qb,
@@ -345,8 +409,8 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                            param_specs: Pytree | None = None,
                            fused_update=None, with_metrics: bool = True,
                            with_telemetry: bool = False,
-                           skip_inactive_compute: bool | str = "auto"
-                           ) -> Callable:
+                           skip_inactive_compute: bool | str = "auto",
+                           placement=None) -> Callable:
     """The ``cfg.fuse_round`` realization of :func:`make_round_step`: K-2
     local steps run in the usual scan (``local_train_deferred``), then the
     whole tail — penultimate update + wire encode (one fused pass), every
@@ -378,6 +442,12 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     sparse = impl in ("ring", "torus", "sparse") and not (
         scheduled and spec.kind == "cycle")
     plan = spec.gossip_plan() if sparse else None
+    if placement is not None:
+        if plan is None:
+            raise ValueError("placement requires the sparse backend, "
+                             f"got impl={impl!r}")
+        plan = plan.placed(placement)
+    perm = None if placement is None else jnp.asarray(placement.perm)
     gate = bool(scheduled and spec.gates_participation)
     tail = make_fused_tail(
         loss_fn, m, eta=cfg.eta, theta=cfg.theta, quant=cfg.quant,
@@ -389,10 +459,18 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                                          live_edge_count, wire_bits_for)
         static_edges = (None if scheduled
                         else float(spec.graph.num_directed_edges()))
+        placement_lanes = (None if plan is None else
+                           _placed_boundary_lane_slots(plan, mesh,
+                                                       client_axes))
 
     def round_step(state: RoundState, batches: Pytree):
         key_round, key_mix, key_next = jax.random.split(state.rng, 3)
         client_keys = jax.random.split(key_round, m)
+        if perm is not None:
+            # Lane order: lane p trains client perm[p] (keys derive in
+            # client order first — see make_round_step).
+            batches = jax.tree.map(lambda b: b[perm], batches)
+            client_keys = client_keys[perm]
         K = jax.tree.leaves(batches)[0].shape[1]
 
         train_head = lambda p, b, k: local_train_deferred(
@@ -403,6 +481,8 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
 
         if scheduled:
             W_t, active, key_q = spec.round_event(key_mix, state.round)
+            if perm is not None:
+                active = active[perm]   # client-order event, lane state
         else:
             W_t = jnp.asarray(spec.W, jnp.float32)
             active, key_q = ones, key_mix
@@ -442,7 +522,10 @@ def _make_fused_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
                 metrics["telemetry"] = Telemetry(
                     consensus_dist=cdist, local_drift=drift,
                     live_edges=live,
-                    wire_bits=wire_bits_for(d, cfg.quant, live))
+                    wire_bits=wire_bits_for(d, cfg.quant, live),
+                    placement_boundary_lanes=(
+                        None if placement_lanes is None
+                        else jnp.float32(placement_lanes)))
         new_state = RoundState(params=x_next, rng=key_next,
                                round=state.round + 1, token=state.token)
         return new_state, metrics

@@ -59,6 +59,23 @@ every step's edges into
 A contiguous-blocked ring therefore moves ONE boundary lane per
 direction per shard regardless of ``m`` — O(n_shards * boundary_degree)
 wire, not O(m).
+
+PLACEMENT (irregular graphs): the contiguous client->shard split is
+optimal for rings/tori but scatters an irregular support graph's edges
+across shard boundaries. Clients are anonymous lanes, so the compiler is
+free to RELABEL them once: :func:`compute_placement` partitions the
+support graph into ``n_shards`` balanced blocks minimizing the directed
+boundary cut (greedy BFS block growing + Kernighan-Lin-style swap
+refinement, pure numpy) and emits a :class:`Placement` — a lane
+permutation ``perm`` (lane -> original client) plus its inverse.
+:meth:`GossipPlan.placed` applies it by conjugating every step
+(``src'[k, p] = inv[src[k, perm[p]]]``) and permuting static weights, so
+every downstream structure — :class:`BlockPlan` sub-steps, weight
+gathers, wire lanes, billing — sees relabeled lanes with no further
+special-casing. Per-lane arithmetic is untouched (same steps, same
+accumulation order, keys/params/data gathered through ``perm`` at
+round-step build), so placed training is BITWISE identical to unplaced
+execution; only which edges cross a shard boundary changes.
 """
 from __future__ import annotations
 
@@ -66,7 +83,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["GossipPlan", "BlockPlan", "BlockSubStep", "compile_block_plan",
+__all__ = ["GossipPlan", "BlockPlan", "BlockSubStep", "Placement",
+           "compile_block_plan", "compute_placement",
            "plan_from_spec", "plan_from_support", "plan_from_matrix",
            "ring_steps", "torus_steps", "matching_steps"]
 
@@ -80,6 +98,12 @@ class GossipPlan:
     w_self / w_steps: static weights (diag(W) and W[i, src[k, i]]),
              present when compiled from a static MixingSpec; None for
              schedule plans, whose weights are gathered per round.
+    lane_to_client: [m] int32 — set on PLACED plans (:meth:`placed`):
+             lane ``p`` of the stacked/wire layout carries original
+             client ``lane_to_client[p]``. ``None`` = identity (the
+             default contiguous layout). ``src``/weights of a placed
+             plan are in LANE space; weight gathers from a client-space
+             ``W_t`` map through this permutation.
     """
 
     m: int
@@ -87,6 +111,7 @@ class GossipPlan:
     name: str = "plan"
     w_self: np.ndarray | None = None      # [m] float64
     w_steps: np.ndarray | None = None     # [n_steps, m] float64
+    lane_to_client: np.ndarray | None = None  # [m] int32, placed plans
 
     def __post_init__(self):
         src = np.asarray(self.src, dtype=np.int32)
@@ -99,6 +124,12 @@ class GossipPlan:
                 raise ValueError(f"step {k} is not a permutation of "
                                  f"range({self.m})")
         object.__setattr__(self, "src", src)
+        if self.lane_to_client is not None:
+            lane = np.asarray(self.lane_to_client, np.int32)
+            if not np.array_equal(np.sort(lane), ref):
+                raise ValueError("lane_to_client must be a permutation "
+                                 f"of range({self.m})")
+            object.__setattr__(self, "lane_to_client", lane)
         if (self.w_self is None) != (self.w_steps is None):
             raise ValueError("w_self and w_steps must be set together")
         if self.w_self is not None:
@@ -149,8 +180,16 @@ class GossipPlan:
         Wj = jnp.asarray(W, jnp.float32)
         idx = jnp.arange(self.m)
         src = jnp.asarray(self.src)
-        w_self = Wj[idx, idx]
-        w_steps = Wj[idx[None, :], src]
+        if self.lane_to_client is None:
+            w_self = Wj[idx, idx]
+            w_steps = Wj[idx[None, :], src]
+        else:
+            # Placed plan: W is in CLIENT space, src in LANE space — map
+            # both endpoints through the lane permutation, so lane p's
+            # step-k weight is W[client(p), client(src[k, p])].
+            lane = jnp.asarray(self.lane_to_client)
+            w_self = Wj[lane, lane]
+            w_steps = Wj[lane[None, :], lane[src]]
         w_steps = jnp.where(src == idx[None, :], 0.0, w_steps)
         return w_self, w_steps
 
@@ -161,22 +200,53 @@ class GossipPlan:
 
     def as_matrix(self) -> np.ndarray:
         """Reconstruct the dense W a static plan realizes (reference /
-        dense-backend semantics; exact, since weights were gathered)."""
+        dense-backend semantics; exact, since weights were gathered).
+        Placed plans reconstruct in CLIENT space — ``as_matrix`` is
+        placement-invariant."""
         w_self, w_steps = self.static_weights()
+        lane = (np.arange(self.m) if self.lane_to_client is None
+                else self.lane_to_client)
         W = np.zeros((self.m, self.m), dtype=np.float64)
-        W[np.arange(self.m), np.arange(self.m)] = w_self
+        W[lane, lane] = w_self
         for k in range(self.n_steps):
-            for i in range(self.m):
-                j = int(self.src[k, i])
-                if j != i:
-                    W[i, j] += w_steps[k, i]
+            for p in range(self.m):
+                j = int(self.src[k, p])
+                if j != p:
+                    W[lane[p], lane[j]] += w_steps[k, p]
         return W
 
-    def block_plan(self, n_shards: int) -> "BlockPlan":
+    def placed(self, placement: "Placement | None") -> "GossipPlan":
+        """Apply a :class:`Placement`: relabel every step by conjugation
+        (``src'[k, p] = inv[src[k, perm[p]]]``) and permute static
+        weights, so lane ``p`` carries original client ``perm[p]`` and
+        the block compiler's contiguous blocks ARE the partition's
+        blocks. Step order and each lane's accumulation order are
+        preserved exactly — a placed lane computes bit-identical
+        arithmetic to its original client. ``None`` returns ``self``."""
+        if placement is None:
+            return self
+        if placement.m != self.m:
+            raise ValueError(f"placement is over m={placement.m}, "
+                             f"plan has m={self.m}")
+        if self.lane_to_client is not None:
+            raise ValueError(f"plan {self.name!r} is already placed")
+        perm, inv = placement.perm, placement.inv
+        src_p = inv[self.src[:, perm]]
+        w_self = None if self.w_self is None else self.w_self[perm]
+        w_steps = None if self.w_steps is None else self.w_steps[:, perm]
+        return GossipPlan(m=self.m, src=src_p,
+                          name=f"{self.name}@{placement.name}",
+                          w_self=w_self, w_steps=w_steps,
+                          lane_to_client=perm.copy())
+
+    def block_plan(self, n_shards: int,
+                   placement: "Placement | None" = None) -> "BlockPlan":
         """Compile this plan for a mesh of ``n_shards`` shards, each
         holding a contiguous block of ``m // n_shards`` clients — see
-        :func:`compile_block_plan`."""
-        return compile_block_plan(self, n_shards)
+        :func:`compile_block_plan`. A :class:`Placement` relabels lanes
+        first (:meth:`placed`); default None keeps the contiguous
+        client -> lane identity."""
+        return compile_block_plan(self, n_shards, placement=placement)
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +319,8 @@ class BlockPlan:
         return int(sum(len(subs) for subs in self.substeps))
 
 
-def compile_block_plan(plan: GossipPlan, n_shards: int) -> BlockPlan:
+def compile_block_plan(plan: GossipPlan, n_shards: int,
+                       placement: "Placement | None" = None) -> BlockPlan:
     """Partition ``plan`` for a mesh whose shard ``s`` holds the
     contiguous client block ``[s * m_local, (s+1) * m_local)``.
 
@@ -258,8 +329,13 @@ def compile_block_plan(plan: GossipPlan, n_shards: int) -> BlockPlan:
     (each color = one masked ``ppermute``); pairs are seeded widest-first
     so buffers of similar width share a launch and padding stays small.
     Locality is free by construction: edges that stay inside a block
-    never touch the wire.
+    never touch the wire. An optional :class:`Placement` relabels lanes
+    before blocking (``plan.placed(placement)``), so the partition's
+    blocks — not the raw client-id blocks — become the contiguous
+    shards.
     """
+    if placement is not None:
+        plan = plan.placed(placement)
     m = plan.m
     if n_shards < 1 or m % n_shards:
         raise ValueError(f"plan m={m} does not block over {n_shards} shards")
@@ -307,6 +383,180 @@ def compile_block_plan(plan: GossipPlan, n_shards: int) -> BlockPlan:
         all_substeps.append(tuple(substeps))
     return BlockPlan(m=m, n_shards=n_shards, m_local=m_local,
                      intra_src=intra, substeps=tuple(all_substeps))
+
+
+# ---------------------------------------------------------------------------
+# Placement: locality-aware client -> lane relabeling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """A compile-time client -> lane relabeling for block sharding.
+
+    perm: [m] int32 — lane ``p`` carries original client ``perm[p]``
+          (the gather order for everything client-indexed entering the
+          round step: params, batches, per-client PRNG keys).
+    inv:  [m] int32 — derived inverse: client ``c`` lives at lane
+          ``inv[c]`` (and therefore on shard ``inv[c] // m_local``).
+
+    Applied once at plan compile (:meth:`GossipPlan.placed`); execution
+    is bitwise identical to the unplaced layout — only which edges cross
+    a shard boundary (and therefore the wire bill) changes.
+    """
+
+    perm: np.ndarray
+    n_shards: int
+    name: str = "partition"
+    inv: np.ndarray | None = None        # derived in __post_init__
+
+    def __post_init__(self):
+        perm = np.asarray(self.perm, np.int32)
+        m = perm.shape[0]
+        if not np.array_equal(np.sort(perm), np.arange(m)):
+            raise ValueError(f"placement perm must be a permutation of "
+                             f"range({m})")
+        if self.n_shards < 1 or m % self.n_shards:
+            raise ValueError(f"m={m} does not block over "
+                             f"{self.n_shards} shards")
+        inv = np.empty(m, np.int32)
+        inv[perm] = np.arange(m, dtype=np.int32)
+        object.__setattr__(self, "perm", perm)
+        object.__setattr__(self, "inv", inv)
+
+    @property
+    def m(self) -> int:
+        return int(self.perm.shape[0])
+
+    @property
+    def m_local(self) -> int:
+        return self.m // self.n_shards
+
+    @property
+    def is_identity(self) -> bool:
+        return bool(np.array_equal(self.perm, np.arange(self.m)))
+
+    def shard_of(self) -> np.ndarray:
+        """[m] int32 — shard each ORIGINAL client id lands on."""
+        return (self.inv // self.m_local).astype(np.int32)
+
+    def boundary_edges(self, adj) -> int:
+        """Directed support edges crossing a shard boundary under this
+        placement — the placed analogue of
+        ``Graph.block_boundary_edges``."""
+        shard = self.shard_of()
+        a = np.asarray(adj, dtype=bool)
+        return int((a & (shard[:, None] != shard[None, :])).sum())
+
+    @staticmethod
+    def contiguous(m: int, n_shards: int) -> "Placement":
+        """The identity placement — the blind ``c // m_local`` split
+        every plan gets by default."""
+        return Placement(perm=np.arange(m, dtype=np.int32),
+                         n_shards=n_shards, name="contiguous")
+
+
+def _grow_blocks(adj: np.ndarray, deg: np.ndarray, n_shards: int,
+                 m_local: int, rot: int) -> np.ndarray:
+    """Greedy BFS block growing (GGGP): seed each block at a peripheral
+    unassigned vertex (min degree, rotated by ``rot`` across restarts)
+    and grow it by repeatedly absorbing the unassigned vertex with the
+    most links into the block (ties: fewest external links, then lowest
+    id — fully deterministic)."""
+    m = adj.shape[0]
+    assign = np.full(m, -1, np.int32)
+    for b in range(n_shards):
+        un = np.nonzero(assign < 0)[0]
+        order = un[np.lexsort((un, deg[un]))]      # min degree, min id
+        seed = int(order[rot % len(order)])
+        assign[seed] = b
+        conn = adj[seed].astype(np.int64)          # links into block b
+        for _ in range(m_local - 1):
+            cand = np.nonzero(assign < 0)[0]
+            g = conn[cand]
+            # max gain, then min external degree, then min id
+            best = int(cand[np.lexsort((cand, deg[cand] - g, -g))[0]])
+            assign[best] = b
+            conn = conn + adj[best]
+    return assign
+
+
+def _kl_refine(adj: np.ndarray, assign: np.ndarray, n_shards: int,
+               passes: int) -> np.ndarray:
+    """Kernighan-Lin-style refinement: greedy pairwise swaps between
+    blocks, accepting any swap that STRICTLY reduces the cut (block
+    sizes stay balanced by construction), until a full pass finds no
+    improving swap or ``passes`` passes elapse."""
+    m = adj.shape[0]
+    assign = assign.copy()
+    A = adj.astype(np.int64)
+    # conn[i, b] = links of vertex i into block b
+    conn = np.stack([A[:, assign == b].sum(axis=1)
+                     for b in range(n_shards)], axis=1)
+    for _ in range(passes):
+        improved = False
+        for u in range(m):
+            for v in range(u + 1, m):
+                a, b = int(assign[u]), int(assign[v])
+                if a == b:
+                    continue
+                gain = (conn[u, b] - conn[u, a]
+                        + conn[v, a] - conn[v, b] - 2 * A[u, v])
+                if gain > 0:                       # cut drops by gain
+                    assign[u], assign[v] = b, a
+                    conn[:, a] += A[:, v] - A[:, u]
+                    conn[:, b] += A[:, u] - A[:, v]
+                    improved = True
+        if not improved:
+            break
+    return assign
+
+
+def _cut(adj: np.ndarray, assign: np.ndarray) -> int:
+    return int((adj & (assign[:, None] != assign[None, :])).sum())
+
+
+def compute_placement(graph, n_shards: int, *, restarts: int = 3,
+                      refine_passes: int = 8) -> Placement:
+    """Partition a support graph into ``n_shards`` balanced
+    ``m_local``-blocks minimizing the directed boundary cut, and return
+    the lane :class:`Placement` realizing it.
+
+    ``graph`` is a ``topology.Graph`` or a boolean adjacency matrix
+    (symmetrized; the cut it minimizes is the DIRECTED boundary edge
+    count, i.e. 2x the undirected crossing edges). Candidates — the
+    contiguous identity plus ``restarts`` greedy-BFS block growings
+    (:func:`_grow_blocks`) — are each refined with strict-improvement KL
+    swaps (:func:`_kl_refine`); the best final cut wins, with the
+    contiguous candidate first, so the result is NEVER worse than the
+    blind contiguous split (rings/tori keep their optimal layout). Pure
+    numpy, deterministic, O(restarts * passes * m^2) at compile time —
+    fine for resident populations (m up to a few thousand)."""
+    adj = np.asarray(getattr(graph, "adj", graph), dtype=bool).copy()
+    adj |= adj.T
+    np.fill_diagonal(adj, False)
+    m = adj.shape[0]
+    if n_shards < 1 or m % n_shards:
+        raise ValueError(f"m={m} does not block over {n_shards} shards")
+    m_local = m // n_shards
+    if n_shards == 1 or m_local == 1:
+        # One block, or one client per shard: every balanced assignment
+        # has the same cut — keep the identity.
+        return Placement(perm=np.arange(m, dtype=np.int32),
+                         n_shards=n_shards)
+    deg = adj.sum(axis=1).astype(np.int64)
+    contiguous = (np.arange(m) // m_local).astype(np.int32)
+    candidates = [contiguous] + [
+        _grow_blocks(adj, deg, n_shards, m_local, rot)
+        for rot in range(restarts)]
+    best_assign, best_cut = None, None
+    for cand in candidates:
+        refined = _kl_refine(adj, cand, n_shards, refine_passes)
+        cut = _cut(adj, refined)
+        if best_cut is None or cut < best_cut:
+            best_assign, best_cut = refined, cut
+    perm = np.concatenate([np.nonzero(best_assign == b)[0]
+                           for b in range(n_shards)]).astype(np.int32)
+    return Placement(perm=perm, n_shards=n_shards)
 
 
 # ---------------------------------------------------------------------------

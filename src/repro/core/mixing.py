@@ -311,6 +311,11 @@ def execute_plan_reference(plan: GossipPlan, W, stacked: Pytree,
     leaf_keys = None
     if quant.stochastic:
         leaf_keys = _quant_leaf_keys(key, layout.n_leaves, m)
+        if plan.lane_to_client is not None:
+            # Placed plan: inputs are in LANE order, keys derive in
+            # client order — lane p replays client lane_to_client[p]'s
+            # draws, exactly like the mesh executor.
+            leaf_keys = leaf_keys[:, jnp.asarray(plan.lane_to_client)]
     words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys)
 
     ws = jnp.stack([w_self] + [w_steps[k] for k in live], axis=1)  # [m, K]
@@ -372,13 +377,23 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
     f32 replica buffer into the same stream, so every mode stays at one
     collective launch per plan step.
 
-    BLOCK SHARDING: when the mesh has fewer shards than clients (each
-    shard a contiguous block of ``m_local = m / n_shards`` clients, the
-    layout jax's leading-axis sharding produces), the plan is compiled to
-    a :class:`~repro.core.gossip_plan.BlockPlan` and the body switches to
-    the block realization — intra-block edges become on-device lane
-    gathers (zero wire), boundary edges become shard-level masked
-    ppermute sub-steps carrying only the crossing lanes.
+    This is the ONE sparse executor: every plan is compiled to a
+    :class:`~repro.core.gossip_plan.BlockPlan` over ``n_shards = m /
+    m_local`` shards (each shard a block of ``m_local`` lanes, the
+    layout jax's leading-axis sharding produces) and realized block-wise
+    — intra-block edges become on-device lane gathers (zero wire),
+    boundary edges become shard-level masked ppermute sub-steps carrying
+    only the crossing lanes. At ``m_local == 1`` (one client per shard)
+    the blocks are single lanes, every plan step degenerates to exactly
+    one width-1 boundary sub-step, and the realization is the historical
+    one-permute-per-step program (the mesh HLO pins hold).
+
+    PLACED plans (``plan.lane_to_client`` set by the placement pass)
+    execute identically — the plan arrays are already conjugated into
+    lane space; the only client-space input derived here, the per-(leaf,
+    client) stochastic-rounding keys, is gathered through
+    ``lane_to_client`` so lane ``p`` replays client ``perm[p]``'s exact
+    draws and placed training stays bitwise-equal to unplaced.
     """
     ca = tuple(client_axes)
     m_local = _clients_per_shard(mesh, ca, plan.m)
@@ -387,138 +402,6 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
             f"sparse mixer needs a mesh carrying a client block per "
             f"shard: plan has m={plan.m}, mesh axes {ca!r} must multiply "
             f"to a divisor of it")
-    if m_local > 1:
-        return _make_block_exec(plan, mesh, ca, param_specs, quant,
-                                wire=wire, m_local=m_local)
-    axis = ca[0] if len(ca) == 1 else ca
-    pairs = [plan.wire_pairs(k) for k in range(plan.n_steps)]
-    live = [k for k in range(plan.n_steps) if pairs[k]]
-    m = plan.m
-    w_specs = (P(ca), P(None, ca))
-
-    def local(tree):
-        return jax.tree.map(lambda a: a[0], tree)
-
-    if quant is None or not quant.enabled:
-
-        def body(z_blocks, wself, wsteps):
-            zc = local(z_blocks)
-            layout = WireLayout.for_tree(zc)
-            row = layout.flatten_f32(zc)
-            # Issue EVERY step's ppermute before any combine: the sends
-            # all read the same `row` (a dataflow antichain), so the
-            # collectives can overlap each other and the weighted
-            # accumulation below (collective-matmul idiom).
-            recvs = [jax.lax.ppermute(row, axis, pairs[k]) for k in live]
-            acc = wself[0] * row
-            for k, recv in zip(live, recvs):
-                acc = acc + wsteps[k, 0] * recv
-            return jax.tree.map(lambda a: a[None],
-                                layout.unflatten(acc))
-
-        def ex(x, z, wself, wsteps, key=None):
-            del x, key
-            specs = _full_specs(z, ca, param_specs)
-            fn = _shard_map(body, mesh=mesh,
-                            in_specs=(specs,) + w_specs, out_specs=specs)
-            return fn(z, jnp.asarray(wself, jnp.float32),
-                      jnp.asarray(wsteps, jnp.float32))
-
-        return ex
-
-    # ---- quantized: one packed u32 stream (words | scales | lemma5
-    # replica) through ONE ppermute per plan step ----
-    lemma5 = quant.delta_mode == "lemma5"
-    pallas = _pallas_wire(wire)
-
-    def q_body(x_blocks, z_blocks, keys_blk, wself, wsteps):
-        xc = local(x_blocks)
-        layout = WireLayout.for_tree(xc, bits=quant.bits)
-        nl, W = layout.n_leaves, layout.total_words
-        x2d = layout.to_planar(xc)
-        # Delta subtracts in the LEAF dtype before the f32 cast — the
-        # dense reference's (z - x).astype(f32) semantics (differs for
-        # bf16 params, where f32-cast-then-subtract would keep bits the
-        # wire is not supposed to see).
-        delta = layout.to_planar(jax.tree.map(
-            lambda zl, xl: zl - xl, local(z_blocks), xc))
-        scales = layout.leaf_scales(delta, quant)          # [n_leaves]
-        leaf_keys = keys_blk[0] if quant.stochastic else None
-        words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys,
-                              pallas=pallas)
-        tail = [jax.lax.bitcast_convert_type(scales, jnp.uint32)]
-        if lemma5:
-            tail.append(jax.lax.bitcast_convert_type(
-                x2d.reshape(-1), jnp.uint32))
-        stream = jnp.concatenate([words] + tail)
-        # Every step's ppermute reads the same `stream` — a dataflow
-        # antichain, so the per-step collectives already issue back to
-        # back and can overlap (nothing consumes a received stream until
-        # the fused decode below).
-        streams, wlist = [stream], [wself[0]]
-        for k in live:
-            streams.append(jax.lax.ppermute(stream, axis, pairs[k]))
-            wlist.append(wsteps[k, 0])
-        S = jnp.stack(streams)                             # [K, L] u32
-        weights = jnp.stack(wlist)                         # [K]
-        words_all = S[:, :W]
-        scales_all = jax.lax.bitcast_convert_type(
-            S[:, W:W + nl], jnp.float32)                   # [K, n_leaves]
-        if lemma5:
-            xs = jax.lax.bitcast_convert_type(
-                S[:, W + nl:], jnp.float32).reshape(-1, layout.per, W)
-            base = _weighted_replica_base(xs, weights)
-        else:
-            base = x2d
-        out2d = layout.decode_apply(base, words_all, scales_all, weights,
-                                    quant, pallas=pallas)
-        return jax.tree.map(lambda a: a[None], layout.from_planar(out2d))
-
-    def ex(x, z, wself, wsteps, key):
-        specs = _full_specs(x, ca, param_specs)
-        n_leaves = len(jax.tree.leaves(x))
-        if quant.stochastic:
-            keys = jnp.transpose(_quant_leaf_keys(key, n_leaves, m),
-                                 (1, 0, 2))                # [m, nl, 2]
-        else:
-            keys = jnp.zeros((m, 1, 2), jnp.uint32)
-        smap = _shard_map_no_repcheck if pallas else (
-            lambda b, mesh, in_specs, out_specs: _shard_map(
-                b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
-        fn = smap(q_body, mesh=mesh,
-                  in_specs=(specs, specs, P(ca, None, None)) + w_specs,
-                  out_specs=specs)
-        return fn(x, z, keys, jnp.asarray(wself, jnp.float32),
-                  jnp.asarray(wsteps, jnp.float32))
-
-    return ex
-
-
-def _make_block_exec(plan: GossipPlan, mesh, ca: Sequence[str],
-                     param_specs: Pytree | None,
-                     quant: QuantConfig | None,
-                     wire: str, m_local: int) -> Callable:
-    """Block-sharded sparse exec: each shard holds a CONTIGUOUS block of
-    ``m_local`` clients (lane axis), ``m = n_shards * m_local``.
-
-    Same exec(x, z, w_self, w_steps, key) -> x' contract as the
-    one-client-per-shard bodies, but each plan step is realized from the
-    compiled :class:`~repro.core.gossip_plan.BlockPlan`:
-
-      * intra-shard edges — a lane gather over the local block (the
-        shard-specific index row is selected with ``axis_index``; no
-        collective, no wire bytes);
-      * boundary edges — the step's :class:`BlockSubStep` ppermutes,
-        each moving a ``[width, ...]`` buffer of just the crossing lanes
-        (scattered back over the intra gather; padded rows drop).
-
-    A contiguous-blocked ring ships ONE lane per direction per shard —
-    O(n_shards * boundary_degree) wire bytes instead of O(m). Encode /
-    decode run batched over the lane axis, so the wire words and scales
-    stay bit-identical to the mesh-free reference (elementwise ops); the
-    fused float accumulation is a few-ulp match, same as the m_local=1
-    body (XLA picks FMA contraction per module).
-    """
     n_shards = plan.m // m_local
     bp = plan.block_plan(n_shards)
     axis = ca[0] if len(ca) == 1 else ca
@@ -627,7 +510,12 @@ def _make_block_exec(plan: GossipPlan, mesh, ca: Sequence[str],
         n_leaves = len(jax.tree.leaves(x))
         if quant.stochastic:
             keys = jnp.transpose(_quant_leaf_keys(key, n_leaves, plan.m),
-                                 (1, 0, 2))           # [m, nl, 2]
+                                 (1, 0, 2))           # [m(client), nl, 2]
+            if plan.lane_to_client is not None:
+                # Lane p replays client lane_to_client[p]'s exact draws —
+                # key derivation stays in CLIENT space (single source of
+                # truth), so placed == unplaced bitwise.
+                keys = keys[jnp.asarray(plan.lane_to_client)]
         else:
             keys = jnp.zeros((plan.m, 1, 2), jnp.uint32)
         smap = _shard_map_no_repcheck if pallas else (
@@ -824,44 +712,35 @@ def make_fused_tail(loss_fn, m: int, *, eta: float, theta: float,
     pallas = _pallas_wire(wire)
     lemma5 = quant_on and quant.delta_mode == "lemma5"
 
-    if m_local > 1:
-        bp = plan.block_plan(plan.m // m_local)
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        intra_t = {k: jnp.asarray(bp.intra_src[k]) for k in live}
-        sub_t = {k: [(sub, jnp.asarray(sub.send_lanes),
-                      jnp.asarray(sub.recv_lanes)) for sub in bp.substeps[k]]
-                 for k in live}
+    # ONE realization for every shard width: the compiled BlockPlan's
+    # intra gathers + boundary sub-step ppermutes (at m_local == 1 each
+    # plan step is exactly one width-1 sub-step — the historical
+    # one-permute-per-step program, pinned by the mesh HLO tests).
+    bp = plan.block_plan(plan.m // m_local)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    intra_t = {k: jnp.asarray(bp.intra_src[k]) for k in live}
+    sub_t = {k: [(sub, jnp.asarray(sub.send_lanes),
+                  jnp.asarray(sub.recv_lanes)) for sub in bp.substeps[k]]
+             for k in live}
 
-        def sid():
-            idx = jax.lax.axis_index(ca[0])
-            for a in ca[1:]:
-                idx = idx * sizes[a] + jax.lax.axis_index(a)
-            return idx
+    def sid():
+        idx = jax.lax.axis_index(ca[0])
+        for a in ca[1:]:
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+        return idx
 
-        def issue_steps(stream, s):
-            # All sends read `stream` — a dataflow antichain; the
-            # boundary collectives overlap each other and the gradient
-            # computed between issue and combine.
-            return {k: [jax.lax.ppermute(stream[send[s]], axis, sub.pairs)
-                        for sub, send, _ in sub_t[k]] for k in live}
+    def issue_steps(stream, s):
+        # All sends read `stream` — a dataflow antichain; the
+        # boundary collectives overlap each other and the gradient
+        # computed between issue and combine.
+        return {k: [jax.lax.ppermute(stream[send[s]], axis, sub.pairs)
+                    for sub, send, _ in sub_t[k]] for k in live}
 
-        def combine_step(stream, got_k, k, s):
-            out = stream[intra_t[k][s]]
-            for (sub, send, recv), got in zip(sub_t[k], got_k):
-                out = out.at[recv[s]].set(got, mode="drop")
-            return out
-    else:
-        def sid():
-            return None
-
-        def issue_steps(stream, s):
-            del s
-            return {k: jax.lax.ppermute(stream, axis, pairs[k])
-                    for k in live}
-
-        def combine_step(stream, got_k, k, s):
-            del stream, k, s
-            return got_k
+    def combine_step(stream, got_k, k, s):
+        out = stream[intra_t[k][s]]
+        for (sub, send, recv), got in zip(sub_t[k], got_k):
+            out = out.at[recv[s]].set(got, mode="drop")
+        return out
 
     if not quant_on:
         # fp32 wire: the fused update+publish and mix+deferred-update are
@@ -1031,7 +910,12 @@ def make_fused_tail(loss_fn, m: int, *, eta: float, theta: float,
         n_leaves = len(jax.tree.leaves(x))
         if quant.stochastic:
             keys = jnp.transpose(_quant_leaf_keys(key_q, n_leaves, m),
-                                 (1, 0, 2))         # [m, nl, 2]
+                                 (1, 0, 2))         # [m(client), nl, 2]
+            if plan.lane_to_client is not None:
+                # Placed plan: lane p replays client lane_to_client[p]'s
+                # draws (client-space key derivation, like the unfused
+                # executor) — placed == unplaced bitwise.
+                keys = keys[jnp.asarray(plan.lane_to_client)]
         else:
             keys = jnp.zeros((m, 1, 2), jnp.uint32)
         smap = _shard_map_no_repcheck if pallas else (
@@ -1057,7 +941,8 @@ def make_fused_tail(loss_fn, m: int, *, eta: float, theta: float,
 def make_scheduled_mixer(schedule: TopologySchedule, cfg: MixerConfig,
                          mesh=None,
                          client_axes: Sequence[str] = ("clients",),
-                         param_specs: Pytree | None = None) -> Callable:
+                         param_specs: Pytree | None = None,
+                         placement=None) -> Callable:
     """Build mixer(x, z, key, t) -> (x', active) for a time-varying
     topology.
 
@@ -1083,26 +968,40 @@ def make_scheduled_mixer(schedule: TopologySchedule, cfg: MixerConfig,
     ``eq7`` recursion is only stable for PSD mixing matrices, and sampled
     W_t (Metropolis on a random subgraph) are NOT guaranteed PSD — prefer
     the default ``lemma5`` mode with stochastic schedules.
+
+    ``placement`` (a ``gossip_plan.Placement``, sparse impl only) runs
+    the support plan placed — client state lives in lane order, so the
+    schedule's client-order ``active`` mask is gathered to lane order
+    both for gating and in the returned tuple.
     """
     if cfg.impl not in ("auto", "dense", "sparse"):
         raise ValueError("time-varying schedules support impl 'dense', "
                          f"'sparse' or 'auto', got impl={cfg.impl!r}")
     impl = cfg.resolved_impl(schedule, mesh, client_axes)
     quant = cfg.quant
+    if placement is not None and impl != "sparse":
+        raise ValueError(
+            f"placement requires the sparse backend, got impl={impl!r}")
 
     if impl == "sparse" and schedule.kind == "cycle":
         return _make_cycle_switch_mixer(schedule, cfg, mesh, client_axes,
-                                        param_specs)
+                                        param_specs, placement=placement)
 
     plan = schedule.gossip_plan() if impl == "sparse" else None
+    if plan is not None and placement is not None:
+        plan = plan.placed(placement)
     ev = make_event_mixer(schedule.m, quant=quant, mesh=mesh,
                           client_axes=client_axes, param_specs=param_specs,
                           plan=plan, wire=cfg.wire,
                           gate=schedule.gates_participation)
+    perm = (None if placement is None or placement.is_identity
+            else jnp.asarray(placement.perm))
 
     def mixer(x: Pytree, z: Pytree, key: jax.Array, t
               ) -> tuple[Pytree, jnp.ndarray]:
         W_t, active, key_q = schedule.round_event(key, t)
+        if perm is not None:
+            active = active[perm]
         return ev(x, z, W_t, active, key_q), active
 
     return mixer
@@ -1110,15 +1009,20 @@ def make_scheduled_mixer(schedule: TopologySchedule, cfg: MixerConfig,
 
 def _make_cycle_switch_mixer(schedule: TopologySchedule, cfg: MixerConfig,
                              mesh, client_axes: Sequence[str],
-                             param_specs: Pytree | None) -> Callable:
+                             param_specs: Pytree | None,
+                             placement=None) -> Callable:
     """Dynamic-plan sparse realization of a deterministic cycle: compile
     one static :class:`GossipPlan` PER MEMBER and ``lax.switch`` on
     ``t mod n`` between their shard_map bodies, so each round only moves
     its own member's wire edges. The union-support plan used to ship every
     member's edges every round and mask the off-cycle ones to weight 0 —
     for members with disjoint supports that is strictly wasted wire
-    (see ``plan_round_bits`` with a plan list for the billing side)."""
+    (see ``plan_round_bits`` with a plan list for the billing side).
+    ``placement`` (computed on the UNION support) places every member
+    plan with the same lane relabeling."""
     plans = schedule.gossip_plans()
+    if placement is not None:
+        plans = [p.placed(placement) for p in plans]
     quant = cfg.quant
     execs = [_make_sparse_exec(p, mesh, client_axes, param_specs, quant,
                                wire=cfg.wire) for p in plans]
@@ -1172,7 +1076,8 @@ def make_torus_mixer(spec: MixingSpec, mesh,
 
 def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
                mesh=None, client_axes: Sequence[str] = ("clients",),
-               param_specs: Pytree | None = None) -> Callable:
+               param_specs: Pytree | None = None,
+               placement=None) -> Callable:
     """Return mixer(x_stacked, z_stacked, key=None, t=None) -> x_next.
 
     Semantics (both backends, matching the paper):
@@ -1184,19 +1089,35 @@ def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
     :func:`make_scheduled_mixer`. Every mixer accepts the round counter
     ``t`` (static impls ignore it), so ``make_round_step`` passes it
     uniformly.
+
+    ``placement`` (a ``gossip_plan.Placement`` from
+    :func:`~repro.core.gossip_plan.compute_placement`, sparse impls
+    only): run the compiled plan placed — lanes carry relabeled clients
+    so boundary wire follows the partition cut instead of the contiguous
+    split. Callers hold client state in LANE order (gather inputs
+    through ``placement.perm`` once at build; see ``make_round_step``).
     """
     if isinstance(spec, TopologySchedule):
         return make_scheduled_mixer(spec, cfg, mesh=mesh,
                                     client_axes=client_axes,
-                                    param_specs=param_specs)
+                                    param_specs=param_specs,
+                                    placement=placement)
     impl = cfg.resolved_impl(spec, mesh, client_axes)
     quant = cfg.quant
+    if placement is not None and impl not in ("ring", "torus", "sparse"):
+        raise ValueError(
+            f"placement requires a sparse backend, got impl={impl!r}")
 
     if impl == "ring" and spec.kind == "torus":
         impl = "torus"  # historical alias: ring impl on a torus spec
 
     if impl in ("ring", "torus", "sparse"):
         if _clients_per_shard(mesh, client_axes, spec.m) is None:
+            if placement is not None:
+                raise ValueError(
+                    "placement needs a usable client mesh (the dense "
+                    f"fallback has no lanes to place): m={spec.m}, "
+                    f"client_axes={tuple(client_axes)!r}")
             if impl == "torus" and quant is not None and quant.enabled:
                 # Explicitly requested quantized torus without a usable
                 # mesh: fall back to the dense reference — LOUDLY (this
@@ -1219,7 +1140,10 @@ def make_mixer(spec: MixingSpec | TopologySchedule, cfg: MixerConfig,
         if impl != "sparse" and spec.kind != impl:
             raise ValueError(f"{impl} mixer needs a {impl} MixingSpec, "
                              f"got kind={spec.kind!r}")
-        return make_plan_mixer(spec.gossip_plan(), mesh, client_axes,
+        plan = spec.gossip_plan()
+        if placement is not None:
+            plan = plan.placed(placement)
+        return make_plan_mixer(plan, mesh, client_axes,
                                param_specs=param_specs, quant=quant,
                                wire=cfg.wire)
 

@@ -67,11 +67,15 @@ def make_client_mesh(m: int, axis: str = "clients",
             warnings.warn(
                 f"make_client_mesh: m={m} clients at clients_per_shard="
                 f"{clients_per_shard} needs {n_shards} device shards but "
-                f"this host has {len(devs)}; returning None, so callers "
-                f"FALL BACK TO THE DENSE MIXER (all-gather traffic, not "
-                f"O(degree) ppermutes). Raise --clients-per-shard so that "
-                f"m/clients_per_shard <= {len(devs)}, or pass "
-                f"--mixer-impl dense to make the fallback explicit.",
+                f"this host has {len(devs)} ({n_shards - len(devs)} "
+                f"short); returning None, so callers FALL BACK TO THE "
+                f"DENSE MIXER (all-gather traffic, not O(degree) "
+                f"ppermutes) and any --placement partition request "
+                f"cannot apply (placement permutes block lanes, which "
+                f"only exist on the sparse mesh backend). Raise "
+                f"--clients-per-shard so that m/clients_per_shard <= "
+                f"{len(devs)}, or pass --mixer-impl dense to make the "
+                f"fallback explicit.",
                 UserWarning, stacklevel=2)
         return None
     return Mesh(np.array(devs[:n_shards]), (axis,))

@@ -11,8 +11,9 @@ historical invocation keeps working):
              artifacts (``train.py --log-jsonl`` / ``--trace``):
                PYTHONPATH=src python -m repro.launch.report telemetry \
                    --jsonl run.jsonl [--trace trace.json]
-             Loss trajectory, realized wire vs billed bits, quantizer
-             error vs the Assumption-4 bound, staleness P50/P99, and the
+             Loss trajectory, realized wire vs billed bits, the placed
+             block realization's boundary lane slots, quantizer error vs
+             the Assumption-4 bound, staleness P50/P99, and the
              host-stage wall-time breakdown from the Chrome trace.
 """
 from __future__ import annotations
@@ -110,6 +111,11 @@ def telemetry_report(jsonl_path, trace_path=None) -> str:
             lines.append(f"  comm (billed): {billed/8/2**20:.1f}MB"
                          + (f" (realized/billed = {wire/billed:.3f})"
                             if wire else ""))
+        pbl = [r["placement_boundary_lanes"] for r in rounds
+               if "placement_boundary_lanes" in r]
+        if pbl:
+            lines.append(f"  placement: {pbl[-1]:.0f} boundary wire lane "
+                         f"slots per round (compile-time block cut)")
         qe = [(r["quant_err_sq"], r["quant_bound"]) for r in rounds
               if "quant_err_sq" in r and "quant_bound" in r]
         if qe:

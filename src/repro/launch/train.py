@@ -210,6 +210,17 @@ def main(argv=None):
                          "client axis so m scales past the device count: "
                          "intra-block gossip edges are on-device gathers, "
                          "only boundary lanes touch the wire")
+    ap.add_argument("--placement", default="contiguous",
+                    choices=["contiguous", "partition"],
+                    help="client -> lane placement for the sparse backend: "
+                         "contiguous keeps client c on shard "
+                         "c // clients_per_shard (optimal for rings/tori); "
+                         "partition runs the compile-time graph-partition "
+                         "pass (greedy block growth + Kernighan-Lin "
+                         "refinement) on the support graph to minimize "
+                         "boundary wire lanes on irregular graphs — "
+                         "training is bitwise identical, only the lane "
+                         "layout (and the wire bytes) change")
     ap.add_argument("--wire", default="auto",
                     choices=["auto", "seq", "planar"],
                     help="flat wire-buffer codec for the sparse mixer: "
@@ -306,6 +317,11 @@ def main(argv=None):
             # Branches BEFORE build_topology: pooled schedules on a ring
             # base are constructed structurally, so no O(m^2) adjacency
             # exists at m = 1e5-1e6.
+            if args.placement == "partition":
+                raise SystemExit(
+                    "--placement partition is incompatible with --pool "
+                    "(pooled lanes are cohort slots, not fixed clients, "
+                    "and no O(m^2) support adjacency exists)")
             return run_pooled(args, cfg, log, tracer)
         return _run_resident(args, cfg, log, tracer)
     finally:
@@ -345,11 +361,34 @@ def _run_resident(args, cfg, log, tracer):
                           mixer_impl=impl, wire=args.wire,
                           fuse_round=args.fuse_round)
     scheduled = isinstance(spec, TopologySchedule)
+    placement = None
+    if args.placement == "partition":
+        if impl != "sparse":
+            raise SystemExit(
+                "--placement partition needs the sparse backend (this run "
+                "resolved to the dense reference); see --mixer-impl / "
+                "--clients-per-shard")
+        if args.async_gossip:
+            raise SystemExit("--placement partition is incompatible with "
+                             "--async-gossip (client-order lane "
+                             "bookkeeping)")
+        from ..core.gossip_plan import compute_placement
+        support = spec.support_graph() if scheduled else spec.graph
+        placement = compute_placement(support,
+                                      m // args.clients_per_shard)
+        cut0 = support.block_boundary_edges(args.clients_per_shard)
+        cut1 = support.block_boundary_edges(args.clients_per_shard,
+                                            perm=placement)
+        log.info(f"placement: partition over "
+                 f"{m // args.clients_per_shard} shards — directed "
+                 f"boundary edges {cut0} (contiguous) -> {cut1} (placed)")
     plan = None
     if impl == "sparse":
         # A cycle compiles one plan per member (lax.switch at run time);
         # everything else one union-support plan.
         plans = spec.gossip_plans() if scheduled else [spec.gossip_plan()]
+        if placement is not None:
+            plans = [p.placed(placement) for p in plans]
         plan = plans if len(plans) > 1 else plans[0]
     if scheduled:
         log.info(f"topology schedule: {spec.name} "
@@ -397,7 +436,8 @@ def _run_resident(args, cfg, log, tracer):
     step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
                                    client_axes=client_axes or (),
                                    async_cfg=acfg,
-                                   with_telemetry=args.telemetry),
+                                   with_telemetry=args.telemetry,
+                                   placement=placement),
                    donate_argnums=(0,))
     if acfg is not None:
         state = init_async_state(stacked, k_state, acfg.speed)

@@ -37,6 +37,11 @@ Metric definitions (see ``docs/OBSERVABILITY.md`` for the full math):
                   (live_edges + dropped_edges == the base matrix's ready
                   live count — the invariant the async tests pin).
   cohort_size     pooled: resident lanes this round/event.
+  placement_boundary_lanes
+                  sparse backend: wire lane slots of the run's block
+                  realization — the compile-time boundary cut the
+                  placement pass minimizes, constant per run, surfaced
+                  so placed runs are auditable next to wire_bits.
 
 The quantizer replay draws its stochastic-rounding keys through
 ``core.mixing._quant_leaf_keys`` — the same single source of truth the
@@ -92,6 +97,7 @@ class Telemetry(NamedTuple):
     staleness_hist: jnp.ndarray | None = None
     dropped_edges: jnp.ndarray | None = None
     cohort_size: jnp.ndarray | None = None
+    placement_boundary_lanes: jnp.ndarray | None = None
 
 
 def client_dim(stacked: Pytree) -> int:

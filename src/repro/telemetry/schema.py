@@ -56,6 +56,9 @@ RECORD_FIELDS: dict[str, dict[str, tuple[tuple, bool]]] = {
         "live_edges": (_NUM, False),       # realized live directed edges
         "wire_bits": (_NUM, False),        # message_bits * live_edges
         "comm_bits": (_NUM, False),        # CommLedger cumulative bill
+        # sparse backend: boundary wire lane slots of the (possibly
+        # placed) block realization — compile-time constant per run
+        "placement_boundary_lanes": (_NUM, False),
         # -- codec-path telemetry (quantized rounds) ----------------------
         "quant_err_sq": (_NUM, False),     # mean_i ||Q(d_i) - d_i||^2
         "quant_bound": (_NUM, False),      # Assumption-4 d/4 * s^2 bound

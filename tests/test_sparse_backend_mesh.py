@@ -603,3 +603,106 @@ def test_round_step_sparse_matches_dense_end_to_end():
     print("ROUNDS_OK", err)
     """)
     assert "ROUNDS_OK" in out
+
+
+def test_unified_executor_one_permute_per_step_m_local_1():
+    """PR 9 deleted the dedicated one-client-per-shard executor bodies:
+    the block realization is the ONE sparse executor, and at
+    ``m_local == 1`` it must still compile to the historical
+    one-WIRE-permute-per-plan-step program for every legacy plan family
+    — static ring, static torus, and matching-decomposed irregular
+    graphs — fp32 and quantized. Payload-sized permutes only: XLA's
+    SPMD partitioner may additionally shard the threefry key split into
+    a few word-sized u32 collectives, which carry no model data (their
+    size is pinned tiny here). No all-gather, no f32 wire when
+    quantized."""
+    out = run_sub(_PRELUDE + """
+    import re
+    def wire_permutes(txt, min_elems):
+        wires, small = [], []
+        for l in txt.splitlines():
+            ls = l.strip()
+            if not ls.startswith("%collective-permute"):
+                continue
+            if "-done(" in ls or "collective-permute-start(" in ls:
+                continue
+            shape = re.match(r"%\\S+\\s*=\\s*(\\w+)\\[([\\d,]*)\\]", ls)
+            dtype, dims = shape.group(1), shape.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            (wires if n >= min_elems else small).append((dtype, n))
+        return wires, small
+    specs = [MixingSpec.ring(M, self_weight=0.5),
+             MixingSpec.torus(2, M // 2),
+             MixingSpec.dense(erdos_renyi_graph(M, 0.5, seed=3))]
+    for spec in specs:
+        plan = spec.gossip_plan()
+        for q in (None, QuantConfig(bits=8, stochastic=True,
+                                    delta_mode="lemma5")):
+            mx = make_mixer(spec, MixerConfig(impl="sparse", quant=q),
+                            mesh=mesh, client_axes=("clients",))
+            txt = jax.jit(mx).lower({"w": x}, {"w": z},
+                                    jax.random.PRNGKey(0),
+                                    0).compile().as_text()
+            assert "all-gather" not in txt, spec.kind
+            wires, small = wire_permutes(txt, min_elems=D)
+            assert len(wires) == plan.n_steps, \\
+                (spec.kind, q and q.delta_mode, wires, small)
+            # key-split artifacts stay word-sized, far below the payload
+            assert all(n < D for _, n in small), (spec.kind, small)
+            if q is not None:
+                assert all(t == "u32" for t, _ in wires), \\
+                    (spec.kind, wires)
+            print("UNIFIED_OK", spec.kind, plan.n_steps,
+                  "q8" if q else "fp32")
+    """)
+    assert out.count("UNIFIED_OK") == 6
+
+
+def test_placed_mesh_training_bitwise_equal_to_unplaced():
+    """The tentpole's correctness claim ON THE MESH: full quantized
+    stochastic DFedAvgM rounds with a partition placement produce
+    BITWISE identical per-client parameters to the unplaced run (lane
+    outputs land permuted; gather through the perm to compare), and the
+    placed round step reports the placed boundary-lane telemetry."""
+    out = run_sub(_PRELUDE + """
+    from repro.core import (DFedAvgMConfig, compute_placement,
+                            init_round_state, make_round_step)
+    M2 = 16
+    g = erdos_renyi_graph(M2, 0.35, seed=4)
+    sched = TopologySchedule.partial(g, 0.6)
+    pl = compute_placement(g, 8)
+    loss_fn = lambda p, b, r: 0.5 * jnp.sum((p["w"] - b["c"]) ** 2)
+    cs = jax.random.normal(jax.random.PRNGKey(3), (M2, D))
+    batches = {"c": jnp.broadcast_to(cs[:, None], (M2, 4, D))}
+    cfg = DFedAvgMConfig(eta=0.05, theta=0.5, local_steps=4,
+                         quant=QuantConfig(bits=8, stochastic=True,
+                                           delta_mode="lemma5"),
+                         mixer_impl="sparse")
+    def run(placement):
+        perm = np.arange(M2) if placement is None else placement.perm
+        step = jax.jit(make_round_step(
+            loss_fn, cfg, sched, mesh=mesh, client_axes=("clients",),
+            placement=placement, with_telemetry=True))
+        st = init_round_state({"w": jnp.zeros((M2, D))[perm]},
+                              jax.random.PRNGKey(7))
+        b = {"c": batches["c"]}
+        for _ in range(3):
+            st, mt = step(st, b)
+        w = np.asarray(st.params["w"])
+        inv = np.empty(M2, np.int64); inv[perm] = np.arange(M2)
+        tel = mt["telemetry"]
+        return w[inv], float(mt["loss"]), tel.placement_boundary_lanes
+    w0, l0, _ = run(None)
+    w1, l1, lanes = run(pl)
+    assert l0 == l1, (l0, l1)
+    assert np.array_equal(w0, w1), float(np.max(np.abs(w0 - w1)))
+    sp = sched.support_graph() if hasattr(sched, "support_graph") else g
+    plan = sched.gossip_plan()
+    expect = plan.placed(pl).block_plan(8).num_wire_lane_slots
+    assert float(lanes) == float(expect), (float(lanes), expect)
+    print("PLACED_BITWISE_OK", float(lanes))
+    """)
+    assert "PLACED_BITWISE_OK" in out
