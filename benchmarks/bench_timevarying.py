@@ -205,6 +205,72 @@ _BLOCK_SRC = """
 """
 
 
+_MESH2D_SRC = """
+    import json, warnings
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from benchmarks.common import timeit_best
+    from repro.core import MixingSpec, QuantConfig, plan_round_bits
+    from repro.core.mixing import make_plan_mixer
+    from repro.launch.hlo_stats import collect_collectives
+
+    warnings.filterwarnings("ignore",
+                            message="Some donated buffers were not usable")
+    m, mp, d, iters = {m}, {mp}, {d}, {iters}
+    cps = m // 2
+    plan = MixingSpec.ring(m, self_weight=0.5).gossip_plan()
+    mesh1 = Mesh(np.array(jax.devices()[:2]), ("clients",))
+    mesh2 = Mesh(np.array(jax.devices()[:2 * mp]).reshape(2, mp),
+                 ("clients", "model"))
+    ps2 = {{"w": P("clients", "model")}}
+    x_host = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (m, d)))
+    z_host = x_host + 0.1
+    key = jax.random.PRNGKey(2)
+    out = {{"m": m, "model_parallel": mp, "d": d,
+            "plan_wire_edges": plan.num_directed_wire_edges}}
+
+    def payload_permute_bytes(txt, min_bytes=1024):
+        # Payload ppermutes only: GSPMD also exchanges word-sized RNG
+        # keys along the model axis — real but negligible traffic that
+        # would mask the per-device wire ratio the gate pins.
+        st = collect_collectives(txt).as_dict()
+        assert st["by_kind"].get("all-gather", 0.0) == 0.0, st
+        return sum(b for kind, b in st["per_op"]
+                   if kind == "collective-permute" and b >= min_bytes)
+
+    for bits in (32, 8):
+        q = (QuantConfig(bits=bits, stochastic=False, delta_mode="eq7")
+             if bits < 32 else None)
+        for arm, mesh, specs in (("mesh1d", mesh1, None),
+                                 ("mesh2d", mesh2, ps2)):
+            mx = make_plan_mixer(plan, mesh, param_specs=specs, quant=q)
+            sh = NamedSharding(mesh, P("clients") if specs is None
+                               else ps2["w"])
+            fn = jax.jit(lambda a, b, k: mx({{"w": a}}, {{"w": b}}, k)["w"],
+                         donate_argnums=(0,))
+            x = jax.device_put(x_host, sh)
+            z = jax.device_put(z_host, sh)
+            txt = fn.lower(x, z, key).compile().as_text()
+            wire = payload_permute_bytes(txt)
+            r = jax.block_until_ready(fn(x, z, key))
+            us, r = timeit_best(lambda t, r: fn(r, z, key), r,
+                                iters=iters, reps=3)
+            out[f"{{arm}}_b{{bits}}"] = {{
+                "payload_permute_bytes_per_device": wire,
+                "us_per_round": us,
+                "billed_bits_per_device_column": plan_round_bits(
+                    plan, d, q, clients_per_shard=cps,
+                    model_parallel=1 if specs is None else mp),
+            }}
+    for bits in (32, 8):
+        a, b = out[f"mesh1d_b{{bits}}"], out[f"mesh2d_b{{bits}}"]
+        out[f"wire_ratio_1d_over_2d_b{{bits}}"] = (
+            a["payload_permute_bytes_per_device"] /
+            max(b["payload_permute_bytes_per_device"], 1e-9))
+    print("JSON::" + json.dumps(out))
+"""
+
+
 _FUSED_SRC = """
     import json, warnings
     import numpy as np, jax, jax.numpy as jnp
@@ -336,6 +402,24 @@ _FUSED_SRC = """
         / out["unfused"]["bytes_moved_per_round"])
     print("JSON::" + json.dumps(out))
 """
+
+
+def mesh2d_compare(smoke: bool = False) -> dict:
+    """2D (clients x model) mesh vs the 1D client mesh: the same ring
+    plan mixed with params model-sharded over 4 device columns. Each
+    boundary ppermute then ships only the column's 1/mp slice, so
+    per-device payload wire bytes drop exactly 4x for fp32 and >= 3x
+    for q8 (the lane-block scale rows are shared, not sliced). Gated at
+    the source AND re-checked by ci.yml on the artifact; lands under the
+    ``mesh2d`` key of BENCH_gossip.json."""
+    m, mp = 8, 4
+    d = 16384 if smoke else 65536
+    iters = 10 if smoke else 20
+    res = _run_json_subprocess(
+        _MESH2D_SRC.format(m=m, mp=mp, d=d, iters=iters), 2 * mp)
+    assert res["wire_ratio_1d_over_2d_b32"] == float(mp), res
+    assert res["wire_ratio_1d_over_2d_b8"] >= 3.0, res
+    return res
 
 
 def fused_round_compare(smoke: bool = False) -> dict:
@@ -520,6 +604,9 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
     # (clients_per_shard=8) — m past the device count, wire gated at
     # O(n_shards * boundary_degree).
     res["block64"] = block_gossip_compare(smoke=smoke)
+    # 2D mesh arm: model-parallel columns vs the 1D client mesh — the
+    # per-device wire must shrink ~linearly with the MP degree.
+    res["mesh2d"] = mesh2d_compare(smoke=smoke)
     # Fused-round arm: the overlapped variant against the default round
     # on the same mesh, with the roofline columns CI gates on.
     res["fused"] = fused_round_compare(smoke=smoke)
@@ -552,6 +639,16 @@ def gossip_backend_compare(smoke: bool = False) -> list[tuple]:
         f"ratio={blk['wire_ratio_dense_over_block_b8']:.2f}|"
         f"boundary_lanes={blk['block_wire_lane_slots']}|"
         f"realized_wire_bits={bsp['realized_wire_bits']:.0f}"))
+    m2 = res["mesh2d"]
+    m1a, m2a = m2["mesh1d_b8"], m2["mesh2d_b8"]
+    rows.append((
+        "gossip_mesh2d_vs_1d_b8",
+        m2a["us_per_round"],
+        f"mp={m2['model_parallel']}|"
+        f"wire2dB={m2a['payload_permute_bytes_per_device']:.0f}|"
+        f"wire1dB={m1a['payload_permute_bytes_per_device']:.0f}|"
+        f"ratio={m2['wire_ratio_1d_over_2d_b8']:.2f}|"
+        f"fp32_ratio={m2['wire_ratio_1d_over_2d_b32']:.2f}"))
     fz = res["fused"]
     rows.append((
         "round_fused_vs_unfused_b8",

@@ -1,4 +1,16 @@
 """Core: the paper's contribution — (quantized) DFedAvgM as composable JAX."""
+import jax as _jax
+
+# Every bitwise-equality claim in this repo (sparse == dense, placed ==
+# unplaced, 2D (clients, model) mesh == 1D) requires random draws that do
+# not depend on how GSPMD partitions the module. The legacy threefry
+# lowering is NOT that: the same `uniform(key, (m,))` in a module whose
+# inputs are sharded over a (clients, model) mesh can yield different
+# bits than the unsharded program (observed on jax 0.4.x CPU meshes).
+# The partitionable implementation generates each element's bits from
+# (key, index) alone, so every layout draws the same stream.
+_jax.config.update("jax_threefry_partitionable", True)
+
 from .topology import (Graph, MixingSpec, TopologySchedule, ring_graph,  # noqa
                        chain_graph, torus_graph, complete_graph, star_graph,
                        erdos_renyi_graph, metropolis_hastings,

@@ -115,6 +115,24 @@ class AsyncConfig:
                    path runs the same kernel as the fixed-eta path (the
                    client vmap batches the scalar block) — no XLA
                    fallback, no retrace per eta value.
+    ready_capacity:
+                   compute-skip bound for pool-scale fleets: the event
+                   step gathers at most this many READY lanes, trains
+                   only them (~``ready_capacity/m`` of the full-fleet
+                   local-SGD FLOPs, the padded gather/scatter of the
+                   synchronous partial-participation path), and scatters
+                   the results back. An event whose ready set overflows
+                   the capacity trains the first ``ready_capacity`` ready
+                   lanes and DEFERS the rest: their clocks are not
+                   redrawn, so they remain the queue minimum and fire in
+                   the immediately following zero-duration event —
+                   nothing is dropped, the event just splits. ``None``
+                   (default) trains every lane, the exact legacy graph.
+                   With continuous speed models ties have measure zero
+                   and the typical event has ONE finisher, so
+                   ``ready_capacity=1`` is the natural pool setting
+                   (constant speed fires all m at once — leave this None
+                   there, or accept the m-way event split).
     """
 
     speed: SpeedModel = SpeedModel.constant()
@@ -122,6 +140,7 @@ class AsyncConfig:
     discount: str = "inverse"   # inverse | power
     gamma: float = 0.5
     eta_staleness_decay: float = 0.0
+    ready_capacity: int | None = None
 
     def __post_init__(self):
         if self.discount not in ("inverse", "power"):
@@ -133,6 +152,8 @@ class AsyncConfig:
             raise ValueError("need 0 < gamma <= 1")
         if self.eta_staleness_decay < 0.0:
             raise ValueError("need eta_staleness_decay >= 0")
+        if self.ready_capacity is not None and self.ready_capacity < 1:
+            raise ValueError("need ready_capacity >= 1 (or None)")
 
 
 class AsyncRoundState(NamedTuple):
@@ -237,6 +258,12 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
     path (their published params, which only ever change at their OWN
     events, are what neighbors read — so training at the finish event is
     equivalent to having trained over the whole busy interval).
+    ``AsyncConfig.ready_capacity`` replaces that full-width vmap with the
+    partial-participation path's padded ready-set gather/scatter — only
+    ~``ready_capacity/m`` of the local-SGD FLOPs per event (asserted via
+    ``traced_flops`` in ``tests/test_async_gossip.py``), which is what
+    makes event stepping affordable at pool scale where typically ONE
+    client is ready.
 
     ``spec`` may be a static :class:`MixingSpec` or any non-stateful
     :class:`TopologySchedule` (the event index drives the schedule, and
@@ -310,14 +337,44 @@ def make_async_round_step(loss_fn: LossFn, cfg: DFedAvgMConfig,
             train_one = lambda p, b, k, e: local_train(
                 loss_fn, p, b, k, eta=e, theta=cfg.theta,
                 fused_update=fused_update)
-            z, losses = jax.vmap(train_one)(state.params, batches,
-                                            client_keys, etas)
+            train_args = (state.params, batches, client_keys, etas)
         else:
             train_one = lambda p, b, k: local_train(
                 loss_fn, p, b, k, eta=cfg.eta, theta=cfg.theta,
                 fused_update=fused_update)
-            z, losses = jax.vmap(train_one)(state.params, batches,
-                                            client_keys)
+            train_args = (state.params, batches, client_keys)
+
+        cap = async_cfg.ready_capacity
+        if cap is not None and cap < m:
+            # Pool-scale compute skip: train only the ready lanes, via
+            # the same padded gather/scatter as the synchronous partial-
+            # participation path (see dfedavgm.make_round_step). idx pads
+            # with m (out of range): `safe` clamps the GATHER so shapes
+            # stay static, `mode="drop"` voids the SCATTER, and `valid`
+            # zeroes the padded lanes' losses. Ready lanes past the
+            # capacity are PUSHED BACK to the next event: `ready` is
+            # clamped to the trained set below, so their clocks are not
+            # redrawn (they stay the queue minimum) and they fire in an
+            # immediately following zero-duration event.
+            idx = jnp.nonzero(ready, size=cap, fill_value=m)[0]
+            safe = jnp.minimum(idx, m - 1)
+            valid = (idx < m).astype(jnp.float32)
+            sub_args = tuple(jax.tree.map(lambda l: l[safe], a)
+                             for a in train_args)
+            z_sub, losses_sub = jax.vmap(train_one)(*sub_args)
+            # Untrained lanes hold x exactly — the event mixer's z gate
+            # discards their z anyway (they are no longer ready), so the
+            # mix is bit-identical to the full-width graph's.
+            z = jax.tree.map(
+                lambda xl, zl: xl.at[idx].set(zl, mode="drop"),
+                state.params, z_sub)
+            losses = jnp.zeros((m,), jnp.float32).at[idx].set(
+                losses_sub * valid, mode="drop")
+            trained = jnp.zeros((m,), jnp.float32).at[idx].set(
+                valid, mode="drop")
+            ready = ready * trained
+        else:
+            z, losses = jax.vmap(train_one)(*train_args)
 
         if scheduled:
             W_t, active, key_q = spec.round_event(key_mix, state.round)

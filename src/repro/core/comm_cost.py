@@ -47,7 +47,8 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
                     count_lemma5_replicas: bool = False,
                     t: int | None = None,
                     clients_per_shard: int = 1,
-                    placement=None) -> float:
+                    placement=None,
+                    model_parallel: int = 1) -> float:
     """REALIZED wire diagnostic for the sparse backend: one round of a
     compiled :class:`~repro.core.gossip_plan.GossipPlan` moves
     ``message_bits`` across every directed *plan* edge — a static
@@ -80,14 +81,24 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
     block realization (``gossip_plan.Placement`` lane relabeling)
     instead of the contiguous default — the wire ``--placement
     partition`` actually schedules.
+
+    ``model_parallel``: > 1 bills the PER-DEVICE wire of the 2D
+    ``(clients, model)`` mesh — each of the ``model_parallel`` device
+    columns ships only its ``1/model_parallel`` slice of every boundary
+    lane (the sum over columns still equals the 1D bill; the per-leaf
+    scale words riding the stream tail are billed inside
+    ``message_bits`` and are negligible at production ``d``).
     """
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel={model_parallel} must be >= 1")
     if isinstance(plan, (list, tuple)):
         plans = list(plan)
         if t is not None:
             plans = [plans[int(t) % len(plans)]]
         return sum(plan_round_bits(p, d, quant, count_lemma5_replicas,
                                    clients_per_shard=clients_per_shard,
-                                   placement=placement)
+                                   placement=placement,
+                                   model_parallel=model_parallel)
                    for p in plans) / len(plans)
     qc = quant if quant is not None else QuantConfig(bits=32)
     per_edge = message_bits(d, qc)
@@ -99,8 +110,8 @@ def plan_round_bits(plan, d: int, quant: QuantConfig | None = None,
                              f"must divide m={plan.m}")
         bp = plan.block_plan(plan.m // clients_per_shard,
                              placement=placement)
-        return per_edge * bp.num_wire_lane_slots
-    return per_edge * plan.num_directed_wire_edges
+        return per_edge * bp.num_wire_lane_slots / model_parallel
+    return per_edge * plan.num_directed_wire_edges / model_parallel
 
 
 def async_event_bits(d: int, quant: QuantConfig | None = None,

@@ -98,7 +98,14 @@ class SpeedModel:
         if self.kind == "constant":
             return jnp.full((m,), self.mean, jnp.float32)
         xi = jax.random.normal(key, (m,), jnp.float32)
-        dur = self.mean * jnp.exp(self.sigma * xi - 0.5 * self.sigma ** 2)
+        # mean * exp(sigma*xi - sigma^2/2), with the constant factor folded
+        # at trace time so the exp argument is a SINGLE multiply. The
+        # naive form `sigma*xi - c` is an FMA-contraction hazard: XLA
+        # fuses it into an fma in some modules but not others, and the
+        # 1-ulp argument difference survives the exp — breaking the
+        # pooled-runner == resident-engine bitwise clock parity.
+        scale = self.mean * math.exp(-0.5 * self.sigma ** 2)
+        dur = scale * jnp.exp(self.sigma * xi)
         return dur * jnp.asarray(self.multipliers(m))
 
     # -- constructors ------------------------------------------------------

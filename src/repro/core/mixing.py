@@ -45,6 +45,16 @@ behind ``MixerConfig.wire``: ``planar`` (the Pallas
 auto-selected on TPU) and ``seq`` (a pure-XLA lowering of the identical
 math — the CPU default and the kernels' parity oracle: bit-identical
 wire words/scales, few-ulp fused output).
+
+2D ``(clients, model)`` MESHES (``make_client_mesh(model_parallel=...)``
+plus model-sharded ``param_specs`` from ``sharding.rules``) compose with
+the sparse backend transparently: each device holds only its model slice
+of its client block, the wire buffer is the per-shard layout, and the
+boundary ppermutes — still along the CLIENT axes only — ship just that
+slice, so per-device wire drops ~linearly with model parallelism.
+Quantizer scales stay bitwise-consistent across model shards via a
+``pmax`` amax all-reduce, and stochastic rounding replays the 1D PRNG
+stream sliced per shard (see :func:`_make_sparse_exec`).
 """
 from __future__ import annotations
 
@@ -359,6 +369,55 @@ def _full_specs(tree: Pytree, client_axes: Sequence[str],
         lambda leaf: P(ca, *([None] * (leaf.ndim - 1))), tree)
 
 
+def _model_axes(mesh, client_axes: Sequence[str]) -> tuple:
+    """Mesh axes that are NOT client axes — the tensor-parallel axes of a
+    2D ``(clients, model)`` mesh (empty on the classic 1D client mesh)."""
+    if mesh is None:
+        return ()
+    ca = tuple(client_axes)
+    return tuple(a for a in mesh.axis_names if a not in ca)
+
+
+def _specs_model_sharded(param_specs: Pytree | None,
+                         model_axes: Sequence[str]) -> bool:
+    """True when any param spec shards an inner dim over a model axis —
+    i.e. the shard_map body will see model SLICES of the leaves, so the
+    quantizer's amax must be all-reduced over the model axes and the
+    stochastic noise must be sliced from the full leaf's draw."""
+    if param_specs is None or not model_axes:
+        return False
+    maxes = set(model_axes)
+    for spec in jax.tree.leaves(param_specs,
+                                is_leaf=lambda s: isinstance(s, P)):
+        for entry in spec:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n in maxes for n in names):
+                return True
+    return False
+
+
+def _model_shard_noise(x: Pytree, keys: jnp.ndarray, m: int) -> Pytree:
+    """Stochastic-rounding noise for the 2D mesh, as a STACKED PYTREE in
+    leaf geometry (same shapes as ``x``): each leaf is the FULL leaf's
+    ``uniform(key_leaf_client, (n,))`` draw — identical bits to
+    ``WireLayout.noise_stacked`` on the unsharded layout — reshaped to the
+    leaf's array shape. Handing it to shard_map under the model-sharded
+    param specs slices each device's model block in ARRAY geometry (a
+    non-leading sharded dim is non-contiguous in flat order, so the planar
+    buffer could not be sliced directly), which keeps 2D wire bits equal
+    to 1D positionwise. ``keys`` [m, n_leaves, 2] uint32 (lane order, i.e.
+    already gathered through ``lane_to_client`` for placed plans)."""
+    leaves, treedef = jax.tree.flatten(x)
+    out = []
+    for li, xl in enumerate(leaves):
+        shape = tuple(xl.shape[1:])
+        n = int(np.prod(shape)) if shape else 1
+        u = jax.vmap(lambda k, n=n: jax.random.uniform(
+            k, (n,), jnp.float32))(keys[:, li])
+        out.append(u.reshape((m,) + shape))
+    return jax.tree.unflatten(treedef, out)
+
+
 def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
                       param_specs: Pytree | None,
                       quant: QuantConfig | None,
@@ -394,6 +453,18 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
     client) stochastic-rounding keys, is gathered through
     ``lane_to_client`` so lane ``p`` replays client ``perm[p]``'s exact
     draws and placed training stays bitwise-equal to unplaced.
+
+    2D ``(clients, model)`` MESHES compose transparently: when
+    ``param_specs`` shard inner dims over the mesh's non-client axes,
+    each device's block tree holds only its model slice, the local
+    :class:`WireLayout` is the per-shard wire, and the boundary
+    ppermutes — still issued along the CLIENT axes only — ship just that
+    slice, so per-device wire drops ~linearly with model parallelism.
+    Two cross-shard fixups keep 2D bitwise-equal to 1D: per-leaf amaxes
+    are ``lax.pmax``-all-reduced over the model axes before becoming
+    quantizer scales (max is order-exact), and stochastic-rounding noise
+    is drawn from the FULL leaf's PRNG stream outside the shard_map and
+    sliced per shard in leaf geometry (:func:`_model_shard_noise`).
     """
     ca = tuple(client_axes)
     m_local = _clients_per_shard(mesh, ca, plan.m)
@@ -407,6 +478,8 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
     axis = ca[0] if len(ca) == 1 else ca
     live = [k for k in range(plan.n_steps) if plan.wire_pairs(k)]
     w_specs = (P(ca), P(None, ca))
+    maxes = _model_axes(mesh, ca)
+    sharded2d = _specs_model_sharded(param_specs, maxes)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     intra_t = {k: jnp.asarray(bp.intra_src[k]) for k in live}
     sub_t = {k: [(sub, jnp.asarray(sub.send_lanes),
@@ -455,8 +528,15 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
         def ex(x, z, wself, wsteps, key=None):
             del x, key
             specs = _full_specs(z, ca, param_specs)
-            fn = _shard_map(body, mesh=mesh,
-                            in_specs=(specs,) + w_specs, out_specs=specs)
+            # 2D: leaves the rules leave replicated come out identical on
+            # every model column (client-axis-only collectives), but the
+            # static replication checker can't see through the ppermutes
+            # — turn it off rather than weaken the specs.
+            smap = _shard_map_no_repcheck if sharded2d else (
+                lambda b, mesh, in_specs, out_specs: _shard_map(
+                    b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+            fn = smap(body, mesh=mesh,
+                      in_specs=(specs,) + w_specs, out_specs=specs)
             return fn(z, jnp.asarray(wself, jnp.float32),
                       jnp.asarray(wsteps, jnp.float32))
 
@@ -464,8 +544,9 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
 
     lemma5 = quant.delta_mode == "lemma5"
     pallas = _pallas_wire(wire)
+    use_noise_input = sharded2d and quant.stochastic
 
-    def q_body(x_blocks, z_blocks, keys_blk, wself, wsteps):
+    def q_body(x_blocks, z_blocks, keys_blk, wself, wsteps, *noise_in):
         s = sid()
         layout = WireLayout.for_tree(jax.tree.map(lambda a: a[0], x_blocks),
                                      bits=quant.bits)
@@ -475,11 +556,21 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
         # reference's (z - x).astype(f32) semantics.
         delta = layout.to_planar_stacked(jax.tree.map(
             lambda zl, xl: zl - xl, z_blocks, x_blocks))
-        scales = layout.leaf_scales(delta, quant)     # [m_local, n_leaves]
+        if sharded2d and quant.scale_mode != "fixed":
+            # Model-sharded leaves: the local amax covers only this
+            # device's slice — all-reduce it over the model axes so every
+            # shard derives the IDENTICAL per-leaf scale (max is
+            # order-exact: bitwise equal to the 1D layout's scale).
+            amax = jax.lax.pmax(layout.leaf_amax(delta), maxes)
+            scales = layout.scales_from_amax(amax, quant)
+        else:
+            scales = layout.leaf_scales(delta, quant)  # [m_local, n_leaves]
         leaf_keys = (jnp.transpose(keys_blk, (1, 0, 2))
                      if quant.stochastic else None)   # [nl, m_local, 2]
+        noise2d = (layout.to_planar_stacked(noise_in[0])
+                   if noise_in else None)
         words = layout.encode(delta, scales, quant, leaf_keys=leaf_keys,
-                              pallas=pallas)          # [m_local, W]
+                              pallas=pallas, noise=noise2d)  # [m_local, W]
         tail = [jax.lax.bitcast_convert_type(scales, jnp.uint32)]
         if lemma5:
             tail.append(jax.lax.bitcast_convert_type(
@@ -518,14 +609,23 @@ def _make_sparse_exec(plan: GossipPlan, mesh, client_axes: Sequence[str],
                 keys = keys[jnp.asarray(plan.lane_to_client)]
         else:
             keys = jnp.zeros((plan.m, 1, 2), jnp.uint32)
-        smap = _shard_map_no_repcheck if pallas else (
+        if use_noise_input:
+            # 2D mesh: draw the FULL leaves' rounding noise here (where
+            # the unsharded geometry is known) and let shard_map slice
+            # each device's model block via the param specs.
+            extra = (_model_shard_noise(x, keys, plan.m),)
+            extra_specs = (specs,)
+        else:
+            extra, extra_specs = (), ()
+        smap = _shard_map_no_repcheck if (pallas or sharded2d) else (
             lambda b, mesh, in_specs, out_specs: _shard_map(
                 b, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
         fn = smap(q_body, mesh=mesh,
-                  in_specs=(specs, specs, P(ca, None, None)) + w_specs,
+                  in_specs=(specs, specs, P(ca, None, None)) + w_specs
+                  + extra_specs,
                   out_specs=specs)
         return fn(x, z, keys, jnp.asarray(wself, jnp.float32),
-                  jnp.asarray(wsteps, jnp.float32))
+                  jnp.asarray(wsteps, jnp.float32), *extra)
 
     return ex
 
@@ -706,6 +806,15 @@ def make_fused_tail(loss_fn, m: int, *, eta: float, theta: float,
         raise ValueError(
             f"fused sparse tail needs a mesh carrying a client block per "
             f"shard: m={m}, client_axes={ca!r}")
+    if _specs_model_sharded(param_specs, _model_axes(mesh, ca)):
+        raise ValueError(
+            "fuse_round is not supported with model-sharded params on a "
+            "2D (clients, model) mesh: the fused tail computes the "
+            "round's last gradient INSIDE the client shard_map body, "
+            "which would see only this device's model slice of the "
+            "params. Run the unfused round (fuse_round=False) — its "
+            "local SGD runs outside the mixer under GSPMD, which "
+            "partitions the loss over the model axis automatically.")
     axis = ca[0] if len(ca) == 1 else ca
     pairs = [plan.wire_pairs(k) for k in range(plan.n_steps)]
     live = [k for k in range(plan.n_steps) if pairs[k]]

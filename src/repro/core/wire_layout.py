@@ -40,6 +40,19 @@ TPU) and a pure-XLA reference (CPU default, and the kernels' parity
 oracle: the integer WIRE — packed words and scales — is bit-identical
 between them, and the fused float apply agrees to a few ulp, since XLA
 picks FMA contraction per compiled module).
+
+On a 2D ``(clients, model)`` mesh the layout gains a model-shard
+dimension implicitly: the mixer's shard_map body sees only this device's
+model slice of every leaf, so ``for_tree`` of the LOCAL tree already
+yields per-shard lane-aligned segments and a ``total_words`` that shrinks
+~linearly with model parallelism (which is exactly what each boundary
+ppermute ships). Two hooks keep the sharded wire bitwise-consistent with
+the 1D layout: :meth:`leaf_amax` exposes the pre-scale reduction so the
+executor can ``lax.pmax`` it across model shards (max is order-exact —
+every shard derives the identical per-leaf scale), and
+``encode(noise=...)`` accepts externally drawn rounding noise, sliced
+from the FULL leaf's draw in leaf geometry so each shard replays the 1D
+PRNG stream at its own positions.
 """
 from __future__ import annotations
 
@@ -192,6 +205,28 @@ class WireLayout:
 
     # -- per-leaf scales and stochastic-rounding noise ----------------------
 
+    def leaf_amax(self, delta: jnp.ndarray) -> jnp.ndarray:
+        """Per-leaf ``max|x|`` of a planar delta buffer (leading batch dims
+        allowed). [..., n_leaves]. Split out from :meth:`leaf_scales` so a
+        model-sharded layout can all-reduce the LOCAL amaxes over the model
+        axis (``lax.pmax``) before turning them into scales — max is
+        order-exact, so the resulting scales are bitwise identical to the
+        unsharded layout's."""
+        amaxs = []
+        for lw, off in zip(self.leaf_words, self.word_offsets):
+            amaxs.append(jnp.max(jnp.abs(delta[..., :, off:off + lw]),
+                                 axis=(-2, -1)))
+        return jnp.stack(amaxs, axis=-1)
+
+    def scales_from_amax(self, amax: jnp.ndarray, quant) -> jnp.ndarray:
+        """Per-leaf amaxes [..., n_leaves] -> quantizer steps, the same
+        ``s = amax / qmax`` (0 -> 1.0) as ``core.quantize._scale_for``."""
+        if quant.scale_mode == "fixed":
+            return jnp.full(amax.shape, quant.s, jnp.float32)
+        from .quantize import scale_from_amax
+        s = scale_from_amax(amax, quant.qmax)
+        return jnp.where(s > 0, s, jnp.float32(1.0))
+
     def leaf_scales(self, delta: jnp.ndarray, quant) -> jnp.ndarray:
         """Per-leaf quantizer steps of a planar delta buffer (leading batch
         dims allowed): the same ``s = max|x| / qmax`` (0 -> 1.0) as
@@ -199,14 +234,7 @@ class WireLayout:
         if quant.scale_mode == "fixed":
             batch = delta.shape[:-2]
             return jnp.full(batch + (self.n_leaves,), quant.s, jnp.float32)
-        from .quantize import scale_from_amax
-        ss = []
-        for lw, off in zip(self.leaf_words, self.word_offsets):
-            amax = jnp.max(jnp.abs(delta[..., :, off:off + lw]),
-                           axis=(-2, -1))
-            s = scale_from_amax(amax, quant.qmax)
-            ss.append(jnp.where(s > 0, s, jnp.float32(1.0)))
-        return jnp.stack(ss, axis=-1)
+        return self.scales_from_amax(self.leaf_amax(delta), quant)
 
     def noise(self, leaf_keys: jnp.ndarray) -> jnp.ndarray:
         """Stochastic-rounding noise for one client: ``leaf_keys``
@@ -242,21 +270,26 @@ class WireLayout:
 
     @jax.named_scope("wire/encode")
     def encode(self, delta: jnp.ndarray, scales: jnp.ndarray, quant,
-               leaf_keys=None, pallas: bool = False) -> jnp.ndarray:
+               leaf_keys=None, pallas: bool = False,
+               noise=None) -> jnp.ndarray:
         """Quantize + planar-pack the whole buffer in one pass.
 
         delta [per, W] f32 (pallas) or [..., per, W] (xla); scales
-        [..., n_leaves]. Returns packed uint32 words [..., W].
+        [..., n_leaves]. ``noise`` overrides the internal per-leaf draw
+        with precomputed rounding noise in planar geometry (the 2D-mesh
+        path slices the FULL leaf's draw to its model shard outside the
+        layout, where the unsharded leaf geometry is known). Returns
+        packed uint32 words [..., W].
         """
         from ..kernels import ref as kref
         sblk = self.block_scales(scales)
         stochastic = bool(quant.stochastic)
-        if stochastic:
+        if stochastic and noise is None:
             if leaf_keys is None:
                 raise ValueError("stochastic encode needs per-leaf keys")
             noise = (self.noise(leaf_keys) if delta.ndim == 2
                      else self.noise_stacked(leaf_keys))
-        else:
+        elif not stochastic:
             noise = None
         if pallas:
             from ..kernels.ops import default_interpret
@@ -283,7 +316,8 @@ class WireLayout:
     def encode_momentum(self, y2d: jnp.ndarray, v2d: jnp.ndarray,
                         g2d: jnp.ndarray, x2d: jnp.ndarray,
                         scales: jnp.ndarray, et: jnp.ndarray, quant,
-                        leaf_keys=None, pallas: bool = False
+                        leaf_keys=None, pallas: bool = False,
+                        noise=None
                         ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Fused-round send side: apply the last local heavy-ball step and
         emit the wire words as a side output of the same pass —
@@ -299,12 +333,12 @@ class WireLayout:
         from ..kernels import ref as kref
         sblk = self.block_scales(scales)
         stochastic = bool(quant.stochastic)
-        if stochastic:
+        if stochastic and noise is None:
             if leaf_keys is None:
                 raise ValueError("stochastic encode needs per-leaf keys")
             noise = (self.noise(leaf_keys) if y2d.ndim == 2
                      else self.noise_stacked(leaf_keys))
-        else:
+        elif not stochastic:
             noise = None
         if pallas:
             from ..kernels.ops import default_interpret

@@ -23,6 +23,89 @@ from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
+def validate_sharding(archs=None, model_parallels=(2, 4, 8),
+                      clients=2, strategy_rules=None, verbose=True):
+    """Shardability pre-flight for the 2D ``(clients, model)`` mesh: for
+    every roofline config, eval_shape the abstract param pytree (no
+    allocation) and build its PartitionSpecs under the strategy-A rules at
+    each ``model_parallel`` degree, reporting which rule-covered dims FALL
+    BACK TO REPLICATED (a dim that doesn't divide the model axis, e.g.
+    smollm's 9 heads over model=2). A config whose spec construction
+    RAISES is a hard failure — this is how a broken config dies at
+    pre-flight instead of at ``make_client_mesh`` + first compile.
+
+    Only mesh axis names/sizes are consulted (a lightweight stand-in
+    object, not a device mesh), so this runs on any host regardless of
+    device count. Returns a list of per-(arch, mp) record dicts;
+    ``record["error"]`` is set on failure.
+    """
+    import types
+
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.sharding.rules import (RULES_A, _IS_TUPLE, shapes_and_axes,
+                                      specs_for_tree, stack_shapes)
+
+    rules = strategy_rules or RULES_A
+    archs = list(archs) if archs else list_archs()
+    records = []
+    for arch in archs:
+        cfg = get_config(arch)
+        try:
+            shapes, axes = shapes_and_axes(
+                lambda k, cfg=cfg: M.init_model(k, cfg))
+            stacked = stack_shapes(shapes, clients)
+        except Exception as e:  # noqa: BLE001
+            for mp in model_parallels:
+                records.append({"arch": arch, "model_parallel": mp,
+                                "error": f"init eval_shape: {e!r}"})
+            continue
+        ax_paths = jax.tree_util.tree_flatten_with_path(
+            axes, is_leaf=_IS_TUPLE)[0]
+        shape_leaves = jax.tree.leaves(
+            stacked, is_leaf=lambda x: hasattr(x, "shape"))
+        for mp in model_parallels:
+            fake_mesh = types.SimpleNamespace(
+                axis_names=("clients", "model"),
+                devices=np.empty((clients, mp)))
+            rec = {"arch": arch, "model_parallel": mp,
+                   "n_leaves": len(ax_paths)}
+            try:
+                specs = specs_for_tree(axes, stacked, rules, fake_mesh,
+                                       leading_client=("clients",))
+            except Exception as e:  # noqa: BLE001
+                rec["error"] = repr(e)
+                records.append(rec)
+                continue
+            spec_leaves = jax.tree.leaves(
+                specs, is_leaf=lambda s: isinstance(s, jax.sharding
+                                                    .PartitionSpec))
+            sharded, fallbacks = 0, []
+            for (path, names), spec, shp in zip(ax_paths, spec_leaves,
+                                                shape_leaves):
+                for i, name in enumerate(names):
+                    if name is None or name not in rules or \
+                            name == "layers":
+                        continue
+                    entry = spec[i + 1] if len(spec) > i + 1 else None
+                    ents = entry if isinstance(entry, tuple) else (entry,)
+                    if "model" in ents:
+                        sharded += 1
+                    else:
+                        fallbacks.append({
+                            "leaf": jax.tree_util.keystr(path),
+                            "dim": name, "size": int(shp.shape[i + 1])})
+            rec.update(sharded_dims=sharded, replicated_fallbacks=fallbacks)
+            records.append(rec)
+            if verbose:
+                fb = ", ".join(f"{f['leaf']}:{f['dim']}={f['size']}"
+                               for f in fallbacks) or "none"
+                print(f"[shard-ok] {arch} @ model_parallel={mp}: "
+                      f"{sharded} dims sharded, replicated fallbacks: {fb}")
+    return records
+
+
 def model_flops(cfg, meta) -> float:
     """Analytic MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (serve)."""
     n = cfg.n_active_params()
@@ -146,7 +229,30 @@ def main():
                     choices=[None, "ring", "torus", "sparse", "dense"])
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--eta", type=float, default=1e-3)
+    ap.add_argument("--validate-sharding", action="store_true",
+                    help="2D-mesh pre-flight only: check every config's "
+                         "abstract pytree shards under the rule set at "
+                         "each --model-parallels degree, report "
+                         "replicated fallbacks, exit 1 on any failure")
+    ap.add_argument("--model-parallels", default="2,4,8",
+                    help="comma-separated model_parallel degrees for "
+                         "--validate-sharding")
     args = ap.parse_args()
+
+    if args.validate_sharding:
+        archs = None if args.arch == "all" else args.arch.split(",")
+        mps = tuple(int(v) for v in args.model_parallels.split(","))
+        records = validate_sharding(archs=archs, model_parallels=mps)
+        errors = [r for r in records if r.get("error")]
+        if errors:
+            print(f"\n{len(errors)} SHARDING FAILURES:")
+            for r in errors:
+                print(f"  {r['arch']} @ model_parallel="
+                      f"{r['model_parallel']}: {r['error']}")
+            raise SystemExit(1)
+        print(f"\nall {len(records)} (arch, model_parallel) combinations "
+              f"shard cleanly")
+        return
 
     dfed = None
     if args.bits < 32 or args.mixer is not None or args.local_steps != 2:

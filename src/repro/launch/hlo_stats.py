@@ -77,11 +77,16 @@ class CollectiveStats:
         default_factory=lambda: defaultdict(float))
     counts: dict = dataclasses.field(
         default_factory=lambda: defaultdict(int))
+    per_op: list = dataclasses.field(default_factory=list)
+    # (kind, wire_bytes) per op in program order — lets callers separate
+    # payload-sized boundary permutes from word-sized RNG-key exchanges
+    # (the 2D-mesh wire gates key on this split)
 
     def as_dict(self) -> dict:
         return {"wire_bytes": self.wire_bytes,
                 "by_kind": dict(self.by_kind),
-                "counts": dict(self.counts)}
+                "counts": dict(self.counts),
+                "per_op": list(self.per_op)}
 
 
 def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
@@ -137,6 +142,7 @@ def collect_collectives(hlo_text: str) -> CollectiveStats:
         stats.wire_bytes += wb
         stats.by_kind[kind] += wb
         stats.counts[kind] += 1
+        stats.per_op.append((kind, wb))
     return stats
 
 

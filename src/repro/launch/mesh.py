@@ -41,15 +41,22 @@ _FALLBACK_WARNED: set = set()
 
 
 def make_client_mesh(m: int, axis: str = "clients",
-                     clients_per_shard: int = 1):
-    """1-D client mesh for the sparse GossipPlan backend: each of the
-    ``m // clients_per_shard`` device shards holds a CONTIGUOUS BLOCK of
+                     clients_per_shard: int = 1,
+                     model_parallel: int = 1,
+                     model_axis: str = "model"):
+    """Client mesh for the sparse GossipPlan backend: each of the
+    ``m // clients_per_shard`` client shards holds a CONTIGUOUS BLOCK of
     ``clients_per_shard`` clients (``clients_per_shard=1`` is the classic
-    one-client-per-device layout). Returns ``None`` when the host has too
-    few devices — with a ONE-TIME warning naming the dense fallback and
-    the flags that control it (this used to happen silently). Uses
-    ``jax.sharding.Mesh`` directly so it works on jax releases without
-    ``jax.make_mesh``."""
+    one-client-per-device layout). ``model_parallel > 1`` composes the
+    client axis with a tensor-parallel ``model`` axis into a 2D
+    ``(clients, model)`` mesh of ``n_shards * model_parallel`` devices:
+    each device then holds only its model slice of its client block, and
+    the sparse executor ships only that slice over boundary ppermutes
+    (per-device wire drops ~linearly with ``model_parallel``). Returns
+    ``None`` when the host has too few devices — with a ONE-TIME warning
+    naming the dense fallback and the flags that control it (this used to
+    happen silently). Uses ``jax.sharding.Mesh`` directly so it works on
+    jax releases without ``jax.make_mesh``."""
     import warnings
 
     import numpy as np
@@ -58,32 +65,40 @@ def make_client_mesh(m: int, axis: str = "clients",
     if clients_per_shard < 1 or m % clients_per_shard:
         raise ValueError(
             f"clients_per_shard={clients_per_shard} must divide m={m}")
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel={model_parallel} must be >= 1")
     n_shards = m // clients_per_shard
+    n_devices = n_shards * model_parallel
     devs = jax.devices()
-    if len(devs) < n_shards:
-        key = (m, clients_per_shard)
+    if len(devs) < n_devices:
+        key = (m, clients_per_shard, model_parallel)
         if key not in _FALLBACK_WARNED:
             _FALLBACK_WARNED.add(key)
             warnings.warn(
                 f"make_client_mesh: m={m} clients at clients_per_shard="
-                f"{clients_per_shard} needs {n_shards} device shards but "
-                f"this host has {len(devs)} ({n_shards - len(devs)} "
-                f"short); returning None, so callers FALL BACK TO THE "
-                f"DENSE MIXER (all-gather traffic, not O(degree) "
-                f"ppermutes) and any --placement partition request "
-                f"cannot apply (placement permutes block lanes, which "
-                f"only exist on the sparse mesh backend). Raise "
-                f"--clients-per-shard so that m/clients_per_shard <= "
-                f"{len(devs)}, or pass --mixer-impl dense to make the "
-                f"fallback explicit.",
+                f"{clients_per_shard}, model_parallel={model_parallel} "
+                f"needs {n_devices} devices but this host has {len(devs)} "
+                f"({n_devices - len(devs)} short); returning None, so "
+                f"callers FALL BACK TO THE DENSE MIXER (all-gather "
+                f"traffic, not O(degree) ppermutes) and any --placement "
+                f"partition request cannot apply (placement permutes "
+                f"block lanes, which only exist on the sparse mesh "
+                f"backend). Raise --clients-per-shard so that "
+                f"m/clients_per_shard * model_parallel <= {len(devs)}, "
+                f"or pass --mixer-impl dense to make the fallback "
+                f"explicit.",
                 UserWarning, stacklevel=2)
         return None
-    return Mesh(np.array(devs[:n_shards]), (axis,))
+    if model_parallel == 1:
+        return Mesh(np.array(devs[:n_shards]), (axis,))
+    grid = np.array(devs[:n_devices]).reshape(n_shards, model_parallel)
+    return Mesh(grid, (axis, model_axis))
 
 
 def resident_lane_capacity(bytes_per_client: int,
                            budget_bytes: int | None = None,
-                           overhead: float = 4.0) -> int:
+                           overhead: float = 4.0,
+                           model_parallel: int = 1) -> int:
     """How many client lanes fit device memory — the pooled-execution
     sizing heuristic (``--resident-lanes`` defaults from this).
 
@@ -91,15 +106,21 @@ def resident_lane_capacity(bytes_per_client: int,
     budgets the working set per lane (params + momentum + grads + update
     temporaries ~= 4x params). ``budget_bytes`` defaults to the first
     device's reported memory (v5e: 16 GiB HBM) or 2 GiB when the backend
-    doesn't report one (CPU). Always returns at least 1.
+    doesn't report one (CPU). On a 2D ``(clients, model)`` mesh each
+    device resident-holds only ``1/model_parallel`` of every lane's
+    params, so capacity grows ~linearly with ``model_parallel``. Always
+    returns at least 1.
     """
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel={model_parallel} must be >= 1")
     if budget_bytes is None:
         try:
             stats = jax.devices()[0].memory_stats() or {}
             budget_bytes = stats.get("bytes_limit", 0) or 2 << 30
         except Exception:
             budget_bytes = 2 << 30
-    return max(1, int(budget_bytes / (overhead * bytes_per_client)))
+    per_device = -(-bytes_per_client // model_parallel)
+    return max(1, int(budget_bytes / (overhead * per_device)))
 
 
 # v5e hardware constants for the roofline analysis (per chip / per link)

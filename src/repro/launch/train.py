@@ -210,6 +210,16 @@ def main(argv=None):
                          "client axis so m scales past the device count: "
                          "intra-block gossip edges are on-device gathers, "
                          "only boundary lanes touch the wire")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-parallel degree of the 2D (clients, "
+                         "model) mesh: params shard over the model axis "
+                         "(sharding.rules strategy A) and each of the "
+                         "model_parallel device columns ships only its "
+                         "1/model_parallel slice of every boundary "
+                         "gossip lane, so per-device wire drops "
+                         "~linearly with the degree; needs n_shards * "
+                         "model_parallel devices and the sparse backend "
+                         "(incompatible with --fuse-round and --pool)")
     ap.add_argument("--placement", default="contiguous",
                     choices=["contiguous", "partition"],
                     help="client -> lane placement for the sparse backend: "
@@ -314,6 +324,11 @@ def main(argv=None):
     log.start(config={k: v for k, v in vars(args).items()})
     try:
         if args.pool:
+            if args.model_parallel > 1:
+                raise SystemExit(
+                    "--model-parallel > 1 is incompatible with --pool "
+                    "(pooled lanes hold full replicas in the host store; "
+                    "the 2D mesh is a resident-execution layout)")
             # Branches BEFORE build_topology: pooled schedules on a ring
             # base are constructed structurally, so no O(m^2) adjacency
             # exists at m = 1e5-1e6.
@@ -339,6 +354,20 @@ def _run_resident(args, cfg, log, tracer):
     # Backend selection: sparse needs a mesh with one client BLOCK per
     # shard (clients_per_shard=1 is the classic one-client-per-device
     # layout; >1 lets m exceed the device count).
+    if args.model_parallel < 1:
+        raise SystemExit(f"--model-parallel {args.model_parallel} "
+                         f"must be >= 1")
+    if args.model_parallel > 1 and args.mixer_impl == "dense":
+        raise SystemExit("--model-parallel > 1 needs the sparse backend "
+                         "(the dense einsum reference mixes full "
+                         "replicas); drop --mixer-impl dense")
+    if args.model_parallel > 1 and args.fuse_round:
+        raise SystemExit(
+            "--fuse-round is incompatible with --model-parallel > 1: the "
+            "fused tail computes the last gradient inside the client "
+            "shard_map body, which would only see a 1/model_parallel "
+            "slice of the params; run the unfused round (its local SGD "
+            "auto-partitions over the model axis under GSPMD)")
     mesh = client_axes = None
     if args.mixer_impl in ("auto", "sparse"):
         from .mesh import make_client_mesh
@@ -346,14 +375,17 @@ def _run_resident(args, cfg, log, tracer):
             raise SystemExit(f"--clients-per-shard {args.clients_per_shard} "
                              f"must be >= 1 and divide --clients {m}")
         mesh = make_client_mesh(m,
-                                clients_per_shard=args.clients_per_shard)
-        if mesh is None and args.mixer_impl == "sparse":
+                                clients_per_shard=args.clients_per_shard,
+                                model_parallel=args.model_parallel)
+        if mesh is None and (args.mixer_impl == "sparse"
+                             or args.model_parallel > 1):
+            need = (m // args.clients_per_shard) * args.model_parallel
             raise SystemExit(
-                f"--mixer-impl sparse needs >= "
-                f"{m // args.clients_per_shard} devices "
-                f"(one per block of {args.clients_per_shard} clients), "
-                f"this host has {jax.device_count()}; raise "
-                f"--clients-per-shard to fit")
+                f"this run needs >= {need} devices "
+                f"({m // args.clients_per_shard} client shards x "
+                f"{args.model_parallel} model columns), this host has "
+                f"{jax.device_count()}; raise --clients-per-shard or "
+                f"lower --model-parallel to fit")
     impl = "sparse" if mesh is not None else "dense"
     client_axes = ("clients",) if mesh is not None else ()
     dfed = DFedAvgMConfig(eta=args.eta, theta=args.theta,
@@ -412,9 +444,35 @@ def _run_resident(args, cfg, log, tracer):
 
     key = jax.random.PRNGKey(args.seed)
     k_init, k_state, k_data = jax.random.split(key, 3)
-    params, _ = M.init_model(k_init, cfg)
+    params, axes = M.init_model(k_init, cfg)
     stacked = jax.tree.map(
         lambda t: jnp.broadcast_to(t[None], (m,) + t.shape), params)
+    param_specs = None
+    if args.model_parallel > 1:
+        # 2D (clients, model) mesh: shard each leaf's inner dims over the
+        # model axis (strategy-A rules; leaves whose dims don't divide
+        # stay replicated) and lay the stacked params out that way up
+        # front so the round step never gathers a full replica per lane.
+        from ..sharding.rules import RULES_A, specs_for_tree
+        param_specs = specs_for_tree(axes, stacked, RULES_A, mesh,
+                                     leading_client=("clients",))
+        stacked = jax.device_put(
+            stacked,
+            jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s),
+                         param_specs,
+                         is_leaf=lambda s: isinstance(
+                             s, jax.sharding.PartitionSpec)))
+        n_sharded = sum(
+            any(e is not None and "model" in (e if isinstance(e, tuple)
+                                              else (e,))
+                for e in s)
+            for s in jax.tree.leaves(
+                param_specs,
+                is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)))
+        n_leaves = len(jax.tree.leaves(stacked))
+        log.info(f"2D mesh: model_parallel={args.model_parallel}, "
+                 f"{n_sharded}/{n_leaves} param leaves model-sharded "
+                 f"(the rest replicate per column)")
 
     loss = lambda p, b, r: M.loss_fn(p, cfg, b, r)
     acfg = None
@@ -435,6 +493,7 @@ def _run_resident(args, cfg, log, tracer):
                             message="Some donated buffers were not usable")
     step = jax.jit(make_round_step(loss, dfed, spec, mesh=mesh,
                                    client_axes=client_axes or (),
+                                   param_specs=param_specs,
                                    async_cfg=acfg,
                                    with_telemetry=args.telemetry,
                                    placement=placement),
@@ -447,6 +506,18 @@ def _run_resident(args, cfg, log, tracer):
         state = init_round_state(stacked, k_state, token=token)
 
     d = cfg.n_params()
+    if plan is not None and args.model_parallel > 1:
+        from ..core.comm_cost import plan_round_bits
+        wire_1d = plan_round_bits(plan, d, quant,
+                                  clients_per_shard=args.clients_per_shard,
+                                  placement=placement)
+        wire_col = plan_round_bits(plan, d, quant,
+                                   clients_per_shard=args.clients_per_shard,
+                                   placement=placement,
+                                   model_parallel=args.model_parallel)
+        log.info(f"per-device wire: {wire_col / 8 / 1e6:.2f} MB/round "
+                 f"per model column (1D bill {wire_1d / 8 / 1e6:.2f} MB, "
+                 f"{wire_1d / max(wire_col, 1e-9):.1f}x reduction)")
     # One billing convention for both backends: the live-directed-edge
     # expectation (paper §3.2). Async: realized live edges are billed per
     # event below (the set varies with readiness and staleness).

@@ -121,13 +121,24 @@ def live_edge_count(W, valid=None) -> jnp.ndarray:
 
 
 def wire_bits_for(d: int, quant: QuantConfig | None,
-                  live_edges) -> jnp.ndarray:
+                  live_edges, model_parallel: int = 1) -> jnp.ndarray:
     """Realized wire bits: one ``message_bits`` payload per live directed
     edge — the same per-edge convention every ``comm_cost`` bill uses, so
-    telemetry and ledger are directly comparable."""
+    telemetry and ledger are directly comparable.
+
+    ``model_parallel`` > 1 reports the PER-DEVICE-COLUMN bill of the 2D
+    ``(clients, model)`` mesh instead: each column's boundary ppermutes
+    carry only its ``1/model_parallel`` slice of every payload, so the
+    column bill is the total divided by the degree (the sum over columns
+    recovers the 1D number — the same convention as
+    ``comm_cost.plan_round_bits(model_parallel=...)``, which the 2D mesh
+    tests cross-check against this function)."""
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel={model_parallel} must be >= 1")
     qc = quant if quant is not None else QuantConfig(bits=32)
-    return jnp.float32(message_bits(d, qc)) * jnp.asarray(live_edges,
-                                                          jnp.float32)
+    return (jnp.float32(message_bits(d, qc))
+            * jnp.asarray(live_edges, jnp.float32)
+            / jnp.float32(model_parallel))
 
 
 def quant_round_telemetry(x: Pytree, z_eff: Pytree, quant: QuantConfig,

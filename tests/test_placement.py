@@ -221,7 +221,7 @@ def test_mesh_fallback_warns_once_names_placement_and_still_trains():
 
     n_dev = len(jax.devices())
     m = 8 * n_dev                       # guaranteed too many shards
-    _FALLBACK_WARNED.discard((m, 1))
+    _FALLBACK_WARNED.discard((m, 1, 1))
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         assert make_client_mesh(m) is None
@@ -231,7 +231,7 @@ def test_mesh_fallback_warns_once_names_placement_and_still_trains():
     assert len(msgs) == 1, msgs
     # names the control flags and the ACTUAL mismatch numbers
     assert "--placement" in msgs[0]
-    assert f"needs {m} device shards" in msgs[0]
+    assert f"needs {m} devices" in msgs[0]
     assert f"has {n_dev}" in msgs[0]
     assert f"{m - n_dev} short" in msgs[0]
 

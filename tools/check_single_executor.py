@@ -16,7 +16,12 @@ Checks, all by AST (no imports of jax needed):
      ``_make_sparse_exec``;
   2. every ``jax.lax.ppermute`` / ``lax.ppermute`` / bare ``ppermute``
      call site lives inside ``_make_sparse_exec`` or ``make_fused_tail``
-     (the fused tail shares the same block realization).
+     (the fused tail shares the same block realization);
+  3. every ``jax.lax.pmax`` call site is confined the same way — on the
+     2D ``(clients, model)`` mesh the model-axis amax all-reduce is part
+     of the per-model-shard wire realization (it makes the quantizer
+     scales bitwise shard-count-invariant), so like the boundary
+     ppermutes it must not grow call sites outside the one executor.
 
 Usage:  python tools/check_single_executor.py [src/repro/core/mixing.py]
 
@@ -30,15 +35,20 @@ from pathlib import Path
 
 ALLOWED_EXEC_FACTORIES = ["_make_sparse_exec"]
 ALLOWED_PPERMUTE_SCOPES = {"_make_sparse_exec", "make_fused_tail"}
+ALLOWED_PMAX_SCOPES = ALLOWED_PPERMUTE_SCOPES
+
+
+def _is_call_to(node: ast.Call, name: str) -> bool:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id == name
+    if isinstance(f, ast.Attribute):
+        return f.attr == name
+    return False
 
 
 def _is_ppermute_call(node: ast.Call) -> bool:
-    f = node.func
-    if isinstance(f, ast.Name):
-        return f.id == "ppermute"
-    if isinstance(f, ast.Attribute):
-        return f.attr == "ppermute"
-    return False
+    return _is_call_to(node, "ppermute")
 
 
 def check_file(path: Path) -> list[str]:
@@ -66,13 +76,23 @@ def check_file(path: Path) -> list[str]:
         if not isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
             continue
         for node in ast.walk(top):
-            if isinstance(node, ast.Call) and _is_ppermute_call(node):
-                if top.name not in ALLOWED_PPERMUTE_SCOPES:
-                    problems.append(
-                        f"{path}:{node.lineno}: ppermute call site in "
-                        f"{top.name!r} — wire traffic must go through "
-                        f"the block realization in _make_sparse_exec / "
-                        f"make_fused_tail")
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_ppermute_call(node) \
+                    and top.name not in ALLOWED_PPERMUTE_SCOPES:
+                problems.append(
+                    f"{path}:{node.lineno}: ppermute call site in "
+                    f"{top.name!r} — wire traffic must go through "
+                    f"the block realization in _make_sparse_exec / "
+                    f"make_fused_tail")
+            if _is_call_to(node, "pmax") \
+                    and top.name not in ALLOWED_PMAX_SCOPES:
+                problems.append(
+                    f"{path}:{node.lineno}: pmax call site in "
+                    f"{top.name!r} — the model-axis amax all-reduce "
+                    f"(2D mesh scale consistency) belongs to the block "
+                    f"realization in _make_sparse_exec / "
+                    f"make_fused_tail")
     return problems
 
 
